@@ -1,0 +1,78 @@
+"""Paper §III-D optimization ablations, re-expressed for the TPU port.
+
+* packed-key sort (§III-D2)  → ``jnp.lexsort`` (one variadic sort) vs two
+  chained stable argsorts,
+* counting schedule          → wedge+binary-search vs panel equality vs
+  Pallas kernel (the §III-D3/D5 thread-shape tradeoffs become schedule
+  choices on a vector machine),
+* host-offload preprocessing (§III-D6) → device vs host-offload path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import count_triangles, preprocess, preprocess_host_offload
+from repro.graphs import kronecker_rmat
+
+from .common import timeit
+
+
+def _two_pass_sort(su, sv):
+    o1 = jnp.argsort(sv, stable=True)
+    su2, sv2 = su[o1], sv[o1]
+    o2 = jnp.argsort(su2, stable=True)
+    return su2[o2], sv2[o2]
+
+
+def run():
+    rows = []
+    edges = kronecker_rmat(12, seed=0)
+    n = int(edges.max()) + 1
+    e = jnp.asarray(edges)
+
+    lex = jax.jit(lambda u, v: jnp.lexsort((v, u)))
+    two = jax.jit(_two_pass_sort)
+    u, v = e[:, 0], e[:, 1]
+    us_lex = timeit(lambda: jax.block_until_ready(lex(u, v)))
+    us_two = timeit(lambda: jax.block_until_ready(two(u, v)))
+    rows.append(("ablation/sort/lexsort-packed", us_lex, f"speedup={us_two/us_lex:.2f}x"))
+    rows.append(("ablation/sort/two-pass", us_two, "-"))
+
+    for method in ("wedge_bsearch", "panel", "pallas"):
+        us = timeit(lambda m=method: count_triangles(edges, method=m), warmup=1, iters=3)
+        rows.append((f"ablation/method/{method}", us, "-"))
+
+    rows.extend(run_probe_reduction())
+    us_dev = timeit(lambda: jax.block_until_ready(preprocess(e, n_nodes=n).col))
+    us_host = timeit(lambda: jax.block_until_ready(preprocess_host_offload(edges, n).col))
+    rows.append(("ablation/preprocess/device", us_dev, "-"))
+    rows.append(("ablation/preprocess/host-offload", us_host,
+                 f"overhead={us_host/us_dev:.2f}x;device_footprint=0.5x"))
+    return rows
+
+
+def run_probe_reduction():
+    """§Perf evidence: shorter-side enumeration probe-count reduction."""
+    import jax.numpy as jnp
+
+    from repro.core import preprocess
+    from repro.graphs import barabasi_albert
+
+    rows = []
+    for name, edges in [
+        ("kronecker-12", kronecker_rmat(12, seed=0)),
+        ("kronecker-14", kronecker_rmat(14, seed=0)),
+        ("barabasi-albert-10k", barabasi_albert(10_000, 8, seed=0)),
+    ]:
+        csr = preprocess(jnp.asarray(edges), n_nodes=int(edges.max()) + 1)
+        od = np.asarray(csr.out_degree)
+        src, dst = np.asarray(csr.src), np.asarray(csr.col)
+        base = int(od[src].sum())
+        short = int(np.minimum(od[src], od[dst]).sum())
+        rows.append(
+            (f"ablation/shorter-side/{name}", 0.0,
+             f"probes_base={base};probes_short={short};ratio={short/base:.3f}")
+        )
+    return rows

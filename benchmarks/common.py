@@ -1,0 +1,22 @@
+"""Benchmark harness utilities. CSV contract: name,us_per_call,derived."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

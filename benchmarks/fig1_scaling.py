@@ -1,0 +1,20 @@
+"""Paper Fig. 1: runtime scaling across Kronecker scales."""
+from __future__ import annotations
+
+from repro.core import count_triangles
+from repro.graphs import kronecker_rmat
+
+from .common import timeit
+
+
+def run():
+    rows = []
+    prev_us = None
+    for scale in (8, 9, 10, 11, 12):
+        edges = kronecker_rmat(scale, seed=0)
+        t = count_triangles(edges)
+        us = timeit(lambda: count_triangles(edges), warmup=1, iters=3)
+        growth = f"{us/prev_us:.2f}x" if prev_us else "-"
+        rows.append((f"fig1/kronecker-{scale}", us, f"T={t};growth={growth}"))
+        prev_us = us
+    return rows

@@ -1,0 +1,44 @@
+"""Microbenchmarks of the two Pallas kernels (interpret mode on CPU —
+relative numbers across tile shapes; absolute TPU numbers come from the
+§Roofline analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import count_triangles
+from repro.graphs import kronecker_rmat
+from repro.kernels.triangle_count.ref import intersect_count_ref
+from repro.models.attention import flash_attention_jnp
+
+from .common import timeit
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    def panels(b, l):
+        vals = np.sort(rng.integers(0, 1 << 20, size=(b, l)), axis=1).astype(np.int32)
+        return jnp.asarray(vals)
+
+    for b, lu, lv in [(1024, 64, 64), (256, 256, 256), (64, 1024, 1024)]:
+        a, c = panels(b, lu), panels(b, lv)
+        f = jax.jit(intersect_count_ref)
+        us = timeit(lambda: jax.block_until_ready(f(a, c)), warmup=1, iters=3)
+        pairs = b * lu * lv
+        rows.append((f"kernel/intersect-ref/b{b}xl{lu}x{lv}", us,
+                     f"pairs_per_us={pairs/us:.0f}"))
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 512, 64)), jnp.float32)
+    for bk in (128, 256, 512):
+        us = timeit(
+            lambda bk=bk: jax.block_until_ready(
+                flash_attention_jnp(q, k, k, block_k=bk)
+            ),
+            warmup=1, iters=3,
+        )
+        rows.append((f"kernel/flash-jnp/block_k{bk}", us, "-"))
+    return rows

@@ -1,0 +1,61 @@
+"""Paper §III-E: multi-device counting + Amdahl split.
+
+Runs in a subprocess with 8 fake CPU devices; reports per-phase times and
+the preprocessing fraction that bounds multi-device speedup (the paper
+measures 0.08–0.76 across graphs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CODE = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+from repro.graphs import kronecker_rmat, watts_strogatz
+from repro.core import preprocess, count_triangles_distributed, count_triangles
+
+out = {}
+for name, edges in [("kronecker-11", kronecker_rmat(11, seed=0)),
+                    ("watts-strogatz-20k", watts_strogatz(20000, 10, 0.1, seed=0))]:
+    n = int(edges.max()) + 1
+    e = jnp.asarray(edges)
+    t0 = time.perf_counter(); csr = preprocess(e, n_nodes=n); jax.block_until_ready(csr.col)
+    t0 = time.perf_counter(); csr = preprocess(e, n_nodes=n); jax.block_until_ready(csr.col)
+    pre = time.perf_counter() - t0
+    count_triangles_distributed(edges, mesh)  # warm
+    t0 = time.perf_counter(); t8 = count_triangles_distributed(edges, mesh)
+    total8 = time.perf_counter() - t0
+    count_triangles(edges)  # warm
+    t0 = time.perf_counter(); t1 = count_triangles(edges)
+    total1 = time.perf_counter() - t0
+    assert t8 == t1
+    frac = pre / max(total8, 1e-9)
+    out[name] = dict(pre_us=pre*1e6, total8_us=total8*1e6, total1_us=total1*1e6,
+                     amdahl_frac=frac, triangles=int(t1))
+print(json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", _CODE], capture_output=True, text=True,
+                       env=env, timeout=480)
+    rows = []
+    if r.returncode != 0:
+        rows.append(("multidevice/FAILED", 0.0, r.stderr.strip().splitlines()[-1][:80]))
+        return rows
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    for name, d in data.items():
+        max_speedup = 1.0 / max(d["amdahl_frac"], 1e-9)
+        rows.append((f"multidevice/{name}/8dev", d["total8_us"],
+                     f"T={d['triangles']};amdahl_frac={d['amdahl_frac']:.2f};"
+                     f"max_speedup={min(max_speedup, 8):.2f}x"))
+        rows.append((f"multidevice/{name}/1dev", d["total1_us"], "-"))
+    return rows

@@ -1,0 +1,50 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    ablations,
+    fig1_scaling,
+    kernel_micro,
+    multidevice,
+    section5_approx,
+    table1_runtime,
+    table2_roofline,
+)
+from .common import emit
+
+SUITES = {
+    "table1": table1_runtime.run,      # Table I  — runtimes + speedups
+    "table2": table2_roofline.run,     # Table II — kernel profiling/roofline
+    "fig1": fig1_scaling.run,          # Fig. 1   — Kronecker scaling
+    "ablations": ablations.run,        # §III-D   — optimization ablations
+    "multidevice": multidevice.run,    # §III-E   — multi-device + Amdahl
+    "section5": section5_approx.run,   # §V       — exact vs DOULION
+    "kernels": kernel_micro.run,       # Pallas kernel micro-sweeps
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            emit(fn())
+        except Exception:
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper §V comparison: exact GPU counting vs DOULION-style approximation.
+
+Reports runtime and relative error of the sampled estimate at several
+keep-probabilities against the exact count — the accuracy/speed tradeoff
+the paper cites when arguing for exact counting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import count_triangles, count_triangles_doulion
+from repro.graphs import kronecker_rmat
+
+from .common import timeit
+
+
+def run():
+    edges = kronecker_rmat(12, seed=0)
+    exact = count_triangles(edges)
+    rows = []
+    us_exact = timeit(lambda: count_triangles(edges), warmup=1, iters=3)
+    rows.append(("section5/exact", us_exact, f"T={exact};err=0%"))
+    for p in (0.5, 0.25, 0.1):
+        est = np.mean([count_triangles_doulion(edges, p=p, seed=s) for s in range(3)])
+        us = timeit(lambda: count_triangles_doulion(edges, p=p, seed=0), warmup=1, iters=3)
+        err = abs(est - exact) / exact * 100
+        rows.append((f"section5/doulion-p{p}", us, f"T_est={est:.0f};err={err:.1f}%"))
+    return rows

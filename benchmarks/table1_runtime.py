@@ -1,0 +1,36 @@
+"""Paper Table I: counting runtime + speedup over the CPU baseline.
+
+Reduced-scale reproduction (container is a single CPU core — the paper's
+GPU/CPU roles are played by the vectorized JAX engine vs the NumPy
+baseline; absolute numbers differ, the *structure* of the table is the
+reproduction target: per-graph runtime, triangle counts, speedups).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import count_triangles, count_triangles_numpy
+from repro.graphs import barabasi_albert, kronecker_rmat, watts_strogatz
+
+from .common import timeit
+
+GRAPHS = {
+    "kronecker-10": lambda: kronecker_rmat(10, seed=0),
+    "kronecker-12": lambda: kronecker_rmat(12, seed=0),
+    "kronecker-13": lambda: kronecker_rmat(13, seed=0),
+    "barabasi-albert-20k": lambda: barabasi_albert(20_000, 8, seed=0),
+    "watts-strogatz-100k": lambda: watts_strogatz(100_000, 20, 0.1, seed=0),
+}
+
+
+def run():
+    rows = []
+    for name, make in GRAPHS.items():
+        edges = make()
+        t = count_triangles(edges)
+        us_jax = timeit(lambda: count_triangles(edges), warmup=1, iters=3)
+        us_np = timeit(lambda: count_triangles_numpy(edges), warmup=1, iters=3)
+        m = edges.shape[0] // 2
+        rows.append((f"table1/{name}/jax", us_jax, f"m={m};T={t};speedup={us_np/us_jax:.2f}x"))
+        rows.append((f"table1/{name}/numpy-cpu", us_np, f"m={m};T={t}"))
+    return rows

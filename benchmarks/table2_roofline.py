@@ -1,0 +1,48 @@
+"""Paper Table II: counting-kernel profiling.
+
+The paper reports cache hit rate + achieved bandwidth of the CUDA kernel.
+The TPU-dry-run analogue: per graph, the wedge workload (probes), the
+traffic the count step must move (jaxpr walker), and the achieved probe
+rate of the local run — the bandwidth-utilization story of Table II
+reconstructed from the roofline side.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import count_triangles_csr, make_wedge_plan, preprocess
+from repro.core.count import count_wedges_found
+from repro.graphs import barabasi_albert, kronecker_rmat, watts_strogatz
+from repro.launch.flops import trace_cost
+
+from .common import timeit
+
+GRAPHS = {
+    "kronecker-11": lambda: kronecker_rmat(11, seed=0),
+    "kronecker-12": lambda: kronecker_rmat(12, seed=0),
+    "barabasi-albert-10k": lambda: barabasi_albert(10_000, 8, seed=0),
+    "watts-strogatz-50k": lambda: watts_strogatz(50_000, 20, 0.1, seed=0),
+}
+
+
+def run():
+    rows = []
+    for name, make in GRAPHS.items():
+        edges = make()
+        n = int(edges.max()) + 1
+        csr = preprocess(jnp.asarray(edges), n_nodes=n)
+        plan = make_wedge_plan(csr)
+        cost = trace_cost(lambda c: count_wedges_found(c, plan)[0], csr)
+        us = timeit(lambda: count_triangles_csr(csr, plan), warmup=1, iters=3)
+        probes_per_us = plan.total_wedges / us
+        gb = cost["bytes"] / 1e9
+        rows.append(
+            (
+                f"table2/{name}",
+                us,
+                f"wedges={plan.total_wedges};traffic_gb={gb:.3f};"
+                f"probes_per_us={probes_per_us:.1f};search_steps={plan.n_search_steps}",
+            )
+        )
+    return rows

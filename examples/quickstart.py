@@ -1,0 +1,35 @@
+"""Quickstart: count triangles in a graph, three ways, plus clustering stats.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import (
+    average_clustering_coefficient,
+    count_triangles,
+    count_triangles_numpy,
+    transitivity,
+)
+from repro.graphs import kronecker_rmat
+
+
+def main():
+    edges = kronecker_rmat(scale=12, seed=0)
+    n, m = int(edges.max()) + 1, edges.shape[0] // 2
+    print(f"Kronecker scale-12: {n} nodes, {m} edges")
+
+    for method in ("wedge_bsearch", "panel", "pallas"):
+        t0 = time.perf_counter()
+        t = count_triangles(edges, method=method)
+        print(f"  {method:14s}: {t} triangles in {(time.perf_counter()-t0)*1e3:7.1f} ms")
+
+    t0 = time.perf_counter()
+    t = count_triangles_numpy(edges)
+    print(f"  {'numpy baseline':14s}: {t} triangles in {(time.perf_counter()-t0)*1e3:7.1f} ms")
+
+    print(f"transitivity          = {transitivity(edges):.4f}")
+    print(f"avg clustering coeff  = {average_clustering_coefficient(edges):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched LM serving: prefill a batch of prompts, decode continuations,
+report per-phase latency/throughput.  (The smoke-size model keeps this
+snappy on CPU; the identical decode path lowers at 512 chips in the
+dry-run `decode_32k` / `long_500k` cells.)
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+import os
+
+if __name__ == "__main__":
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-1.5b",
+         "--batch", "8", "--prompt-len", "64", "--gen", "32"],
+        env=env,
+    ))

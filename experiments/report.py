@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md tables from dry-run JSONL records.
+
+Usage: python experiments/report.py experiments/dryrun_baseline.jsonl [section]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    return recs
+
+
+def fmt_si(x):
+    if x == 0:
+        return "0"
+    for unit, scale in [("T", 1e12), ("G", 1e9), ("M", 1e6), ("k", 1e3)]:
+        if abs(x) >= scale:
+            return f"{x/scale:.2f}{unit}"
+    return f"{x:.2g}"
+
+
+def dominant_collective(rec):
+    c = rec.get("collectives", {}).get("bytes_by_kind", {})
+    if not c or not any(c.values()):
+        return "-"
+    k = max(c, key=c.get)
+    return f"{k}:{fmt_si(c[k])}B"
+
+
+def roofline_table(recs, mesh_filter="16x16"):
+    rows = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck "
+        "| MODEL_FLOPS | useful/HLO | roofline frac | dominant collective |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh_filter:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** | {fmt_si(r['model_flops'])} "
+            f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {dominant_collective(r)} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = [
+        "| arch | shape | mesh | compile (s) | arg bytes/dev | temp bytes/dev | collectives (#ops) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        ma = r.get("memory_analysis") or {}
+        counts = r.get("collectives", {}).get("count_by_kind", {})
+        n_coll = sum(counts.values())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {fmt_si(ma.get('argument_bytes') or 0)} | {fmt_si(ma.get('temp_bytes') or 0)} "
+            f"| {n_coll} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1])
+    section = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if section == "roofline":
+        print(roofline_table(recs))
+    elif section == "dryrun":
+        print(dryrun_table(recs))
+    elif section == "multipod":
+        print(roofline_table(recs, mesh_filter="2x16x16"))

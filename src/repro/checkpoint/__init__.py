@@ -1,0 +1,16 @@
+"""Fault-tolerant checkpointing."""
+from .checkpoint import (
+    CheckpointManager,
+    save_checkpoint,
+    restore_checkpoint,
+    restore_latest,
+    list_checkpoints,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "restore_checkpoint",
+    "restore_latest",
+    "list_checkpoints",
+]

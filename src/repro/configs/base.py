@@ -1,0 +1,64 @@
+"""Shared plumbing for architecture configs and the dry-run driver."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DryRunSpec", "sds", "dp_axes", "named", "rep"]
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    """Everything needed to ``jit(...).lower(...).compile()`` one cell."""
+
+    step_fn: Callable
+    args: tuple                      # pytrees of ShapeDtypeStruct
+    in_shardings: Any                # pytree (prefix) of NamedSharding
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    description: str = ""
+    model_flops: float = 0.0         # "useful" FLOPs for §Roofline
+    n_params: int = 0
+    tokens_per_step: int = 0
+
+    def lower(self):
+        kwargs = {}
+        if self.out_shardings is not None:
+            kwargs["out_shardings"] = self.out_shardings
+        fn = jax.jit(
+            self.step_fn,
+            in_shardings=self.in_shardings,
+            donate_argnums=self.donate_argnums,
+            **kwargs,
+        )
+        return fn.lower(*self.args)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def pad_to(n: int, multiple: int = 512) -> int:
+    """Round a sharded dimension up to the mesh-divisible size.
+
+    Real pipelines pad ragged shards the same way (−1-padded edges /
+    candidate ids are masked by every consumer in this codebase).
+    """
+    return -(-n // multiple) * multiple
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch-parallel axes = every mesh axis except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def rep(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

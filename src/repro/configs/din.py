@@ -1,0 +1,175 @@
+"""din [arXiv:1706.06978]: embed_dim=18, seq 100, attn MLP 80-40, MLP 200-80.
+
+Shapes: ``train_batch`` (65 536), ``serve_p99`` (512), ``serve_bulk``
+(262 144), ``retrieval_cand`` (1 user × 10⁶ candidates as one batched
+einsum — no loop).  Embedding tables are row-sharded over "model"; batches
+shard over the data axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.recsys import din as din_model
+from repro.optim import adamw, apply_updates, constant
+
+from .base import DryRunSpec, dp_axes, named, pad_to, rep, sds
+
+ARCH_ID = "din"
+FAMILY = "recsys"
+
+DIN_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+SHAPES = tuple(DIN_SHAPES)
+
+
+def full_config() -> din_model.DINConfig:
+    return din_model.DINConfig(
+        name=ARCH_ID, n_items=1_000_000, n_cates=10_000, embed_dim=18, seq_len=100,
+        attn_mlp=(80, 40), mlp=(200, 80),
+    )
+
+
+def smoke_config() -> din_model.DINConfig:
+    return din_model.DINConfig(
+        name=ARCH_ID, n_items=1000, n_cates=50, embed_dim=8, seq_len=10,
+        attn_mlp=(16, 8), mlp=(24, 12),
+    )
+
+
+def _param_shardings(mesh, params_sds):
+    def rule(path_leaf):
+        path, leaf = path_leaf
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "item_table" in name or "cate_table" in name:
+            return NamedSharding(mesh, P("model", None))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_sds)
+    return jax.tree_util.tree_unflatten(treedef, [rule(x) for x in flat])
+
+
+def _flops(cfg: din_model.DINConfig, batch: int, seq: int, train: bool) -> float:
+    d2 = 2 * cfg.embed_dim
+    attn = 2.0 * (4 * d2 * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1] + cfg.attn_mlp[1])
+    mlp = 2.0 * (3 * d2 * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1])
+    f = batch * (seq * attn + mlp)
+    return f * (3.0 if train else 1.0)
+
+
+def build_dryrun(shape: str, mesh, variant: str = "baseline"):
+    """``variant="opt"`` (§Perf, serve/retrieval shapes): replicate the
+    embedding tables — they are only ~77 MB, so row-sharding them buys
+    nothing at inference while every lookup pays a cross-"model" exchange;
+    replication deletes that collective entirely.  Training keeps the
+    row-sharded tables (their fp32 moments are what sharding is for)."""
+    cfg = full_config()
+    spec = DIN_SHAPES[shape]
+    dp = dp_axes(mesh)
+    dpP = dp if len(dp) > 1 else dp[0]
+    params_sds = jax.eval_shape(lambda k: din_model.init_params(k, cfg), jax.random.PRNGKey(0))
+    replicate_tables = variant == "opt" and spec["kind"] != "train"
+    if replicate_tables:
+        param_sh = jax.tree.map(lambda _: rep(mesh), params_sds)
+    else:
+        param_sh = _param_shardings(mesh, params_sds)
+    b = spec["batch"]
+    s = cfg.seq_len
+
+    def batch_sds(bsz):
+        return {
+            "hist_items": sds((bsz, s), jnp.int32),
+            "hist_cates": sds((bsz, s), jnp.int32),
+            "target_item": sds((bsz,), jnp.int32),
+            "target_cate": sds((bsz,), jnp.int32),
+            "label": sds((bsz,)),
+        }
+
+    def batch_sh(axis):
+        return {
+            "hist_items": named(mesh, axis, None),
+            "hist_cates": named(mesh, axis, None),
+            "target_item": named(mesh, axis),
+            "target_cate": named(mesh, axis),
+            "label": named(mesh, axis),
+        }
+
+    if spec["kind"] == "train":
+        opt_init, opt_update = adamw(constant(1e-3), weight_decay=0.0)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(din_model.loss_fn)(params, cfg, batch)
+            updates, opt_state, _ = opt_update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, {"loss": loss}
+
+        from repro.optim import OptState
+
+        opt_sds = jax.eval_shape(opt_init, params_sds)
+        # moments of the tables shard like the tables; step replicates
+        opt_sh = OptState(step=rep(mesh), mu=param_sh, nu=param_sh)
+        return DryRunSpec(
+            step_fn=step,
+            args=(params_sds, opt_sds, batch_sds(b)),
+            in_shardings=(param_sh, opt_sh, batch_sh(dpP)),
+            donate_argnums=(0, 1),
+            description=f"{ARCH_ID} train B={b}",
+            model_flops=_flops(cfg, b, s, True),
+            tokens_per_step=b,
+        )
+
+    if spec["kind"] == "serve":
+        def step(params, batch):
+            return din_model.apply(params, cfg, batch)
+
+        bs = batch_sds(b)
+        bs.pop("label")
+        bh = batch_sh(dpP)
+        bh.pop("label")
+        return DryRunSpec(
+            step_fn=step,
+            args=(params_sds, bs),
+            in_shardings=(param_sh, bh),
+            description=f"{ARCH_ID} serve B={b}",
+            model_flops=_flops(cfg, b, s, False),
+            tokens_per_step=b,
+        )
+
+    # retrieval: 1 user, 1M candidates sharded over the whole mesh
+    c = pad_to(spec["n_candidates"])  # −1-padded tail, masked by embedding_lookup
+    all_axes = tuple(mesh.axis_names)
+
+    def step(params, batch):
+        return din_model.score_candidates(params, cfg, batch)
+
+    args = (
+        params_sds,
+        {
+            "hist_items": sds((1, s), jnp.int32),
+            "hist_cates": sds((1, s), jnp.int32),
+            "cand_items": sds((c,), jnp.int32),
+            "cand_cates": sds((c,), jnp.int32),
+        },
+    )
+    in_sh = (
+        param_sh,
+        {
+            "hist_items": rep(mesh),
+            "hist_cates": rep(mesh),
+            "cand_items": named(mesh, all_axes),
+            "cand_cates": named(mesh, all_axes),
+        },
+    )
+    return DryRunSpec(
+        step_fn=step,
+        args=args,
+        in_shardings=in_sh,
+        out_shardings=named(mesh, all_axes),
+        description=f"{ARCH_ID} retrieval C={c}",
+        model_flops=_flops(cfg, c, s, False),
+        tokens_per_step=c,
+    )

@@ -1,0 +1,267 @@
+"""Shared builders for the five LM architectures.
+
+Each LM arch module supplies a :class:`~repro.models.transformer.TransformerConfig`
+plus a per-device microbatch target; this module turns (config × shape ×
+mesh) into a :class:`~repro.configs.base.DryRunSpec`:
+
+* ``train_4k``    → full train step (grad-accum scan → AdamW update),
+* ``prefill_32k`` → prefill returning last-token logits + KV caches,
+* ``decode_32k``  → one decode step against a (B, 32k) KV cache,
+* ``long_500k``   → one decode step against a 524 288-token cache whose
+  sequence axis is sharded over **all** mesh axes (flash-decoding as
+  sharded reductions; see DESIGN.md §4 on why the 500k *decode* cell runs
+  for full-attention archs while 500k *prefill* does not exist).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import lm_rules, moe_rules_patch, make_param_shardings, spec_for
+from repro.models import transformer as tfm
+from repro.optim import adamw, apply_updates, cosine_with_warmup
+
+from .base import DryRunSpec, dp_axes, named, rep, sds
+
+__all__ = ["LM_SHAPES", "build_lm_dryrun", "lm_smoke_config", "make_lm_train_step"]
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode_long", seq=524288, batch=1),
+}
+
+
+def _rules_for(cfg: tfm.TransformerConfig, mesh, tp_only: bool = False):
+    fsdp = dp_axes(mesh)
+    rules = lm_rules(fsdp, tp_only=tp_only)
+    if cfg.is_moe:
+        rules = moe_rules_patch(rules, fsdp, tp_only=tp_only)
+    return rules
+
+
+# fp32 master + 2 fp32 moments must fit in one TP shard's HBM to drop FSDP
+_TP_ONLY_BUDGET = 16e9 / 12 * 16  # ≈ params ≤ 21B at TP16… gated at 8B below
+
+
+def _use_tp_only(cfg: tfm.TransformerConfig, mesh) -> bool:
+    tp = mesh.shape["model"]
+    bytes_per_dev = cfg.n_params() * 12 / tp  # fp32 master + mu + nu
+    return bytes_per_dev < 8e9  # leave ≥8 GB for activations/caches
+
+
+def _param_specs(cfg, mesh, tp_only: bool = False):
+    params_sds = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    rules = _rules_for(cfg, mesh, tp_only=tp_only)
+    shardings = make_param_shardings(mesh, rules, params_sds)
+    return params_sds, shardings, rules
+
+
+def make_lm_train_step(cfg: tfm.TransformerConfig, accum: int, grad_specs=None, lr=None):
+    """Grad-accumulation train step.
+
+    ``grad_specs`` (a pytree of PartitionSpec matching the params) pins the
+    accumulated-gradient scan carry to the parameter sharding — without it
+    GSPMD tends to replicate the carry, which multiplies per-device temp
+    memory by the DP degree.
+    """
+    opt_init, opt_update = adamw(lr or cosine_with_warmup(3e-4, 2000, 100_000))
+
+    def constrain(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        def micro_grads(mb):
+            return jax.value_and_grad(tfm.loss_fn)(params, mb, cfg)
+
+        if accum == 1:
+            mb = jax.tree.map(lambda x: x[0], batch)
+            loss, grads = micro_grads(mb)
+            grads = constrain(grads)
+        else:
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = micro_grads(mb)
+                grads_acc = constrain(jax.tree.map(jnp.add, grads_acc, grads))
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), batch)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        updates, opt_state, gnorm = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+    return train_step, opt_init
+
+
+def _opt_state_specs(params_sds, rules, mesh, opt_init):
+    opt_sds = jax.eval_shape(opt_init, params_sds)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_for(rules, opt_sds)
+    )
+    return opt_sds, shardings
+
+
+def _accum_for(cfg, mesh, shape, micro_target: int):
+    dp = 1
+    for a in dp_axes(mesh):
+        dp *= mesh.shape[a]
+    per_dev = shape["batch"] // dp
+    if per_dev == 0:
+        raise ValueError(f"batch {shape['batch']} smaller than dp={dp}")
+    accum = max(1, per_dev // micro_target)
+    while shape["batch"] % (dp * accum):
+        accum -= 1
+    return accum, shape["batch"] // accum
+
+
+def build_lm_dryrun(
+    cfg: tfm.TransformerConfig,
+    shape_name: str,
+    mesh,
+    micro_target: int = 2,
+    variant: str = "baseline",
+):
+    """§Perf variants:
+
+    * ``"opt"``  — one-hot CE (no logits all-gather) + TP-only weights when
+      master+moments fit one TP shard (no per-microbatch FSDP gathers),
+    * ``"opt2"`` — opt + ``dots_saveable`` remat (matmul outputs kept, only
+      elementwise replayed: trades activation memory for the ~2ND replay
+      FLOPs that cap MFU at 0.75 under full remat).
+    """
+    import dataclasses
+
+    shape = LM_SHAPES[shape_name]
+    tp_only = variant in ("opt", "opt2") and _use_tp_only(cfg, mesh)
+    if variant in ("opt", "opt2"):
+        cfg = dataclasses.replace(cfg, onehot_ce=True)
+    if variant == "opt2":
+        cfg = dataclasses.replace(cfg, remat_policy="dots")
+    dp = dp_axes(mesh)
+    dpP = dp if len(dp) > 1 else dp[0]
+    params_sds, param_sh, rules = _param_specs(cfg, mesh, tp_only=tp_only)
+    b, s = shape["batch"], shape["seq"]
+
+    if shape["kind"] == "train":
+        accum, micro_total = _accum_for(cfg, mesh, shape, micro_target)
+        grad_specs = spec_for(rules, params_sds)
+        step, opt_init = make_lm_train_step(cfg, accum, grad_specs=grad_specs)
+        opt_sds, opt_sh = _opt_state_specs(params_sds, rules, mesh, opt_init)
+        batch_sds = {
+            "tokens": sds((accum, micro_total, s), jnp.int32),
+            "labels": sds((accum, micro_total, s), jnp.int32),
+        }
+        batch_sh = {
+            "tokens": named(mesh, None, dpP, None),
+            "labels": named(mesh, None, dpP, None),
+        }
+        tokens = b * s
+        return DryRunSpec(
+            step_fn=step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1),
+            description=f"{cfg.name} train accum={accum}",
+            model_flops=6.0 * cfg.n_active_params() * tokens,
+            n_params=cfg.n_params(),
+            tokens_per_step=tokens,
+        )
+
+    if shape["kind"] == "prefill":
+        def prefill_step(params, tokens):
+            return tfm.prefill(params, tokens, cfg)
+
+        cache_spec = P(None, dpP, None, "model", None)
+        out_sh = (
+            named(mesh, dpP, "model"),                       # last logits (B, V)
+            (NamedSharding(mesh, cache_spec), NamedSharding(mesh, cache_spec)),
+        )
+        tokens = b * s
+        return DryRunSpec(
+            step_fn=prefill_step,
+            args=(params_sds, sds((b, s), jnp.int32)),
+            in_shardings=(param_sh, named(mesh, dpP, None)),
+            out_shardings=out_sh,
+            description=f"{cfg.name} prefill",
+            model_flops=2.0 * cfg.n_active_params() * tokens
+            + 4.0 * b * cfg.n_heads * cfg.head_dim * s * s / 2,
+            n_params=cfg.n_params(),
+            tokens_per_step=tokens,
+        )
+
+    # decode kinds
+    long = shape["kind"] == "decode_long"
+    kv_quant = variant in ("opt", "opt2")
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    seq_axes = (*dp, "model") if long else ("model",)
+    seq_spec = seq_axes if long else "model"
+    batch_axis = None if long else dpP
+    cache_sh = NamedSharding(mesh, P(None, batch_axis, None, seq_spec, None))
+    scale_sh = NamedSharding(mesh, P(None, batch_axis, None, seq_spec))
+    kv_shape = (cfg.n_layers, b, cfg.n_kv_heads, s, cfg.head_dim)
+    if kv_quant:
+        cache_sds = (
+            sds(kv_shape, jnp.int8),
+            sds(kv_shape[:-1], jnp.float32),
+            sds(kv_shape, jnp.int8),
+            sds(kv_shape[:-1], jnp.float32),
+        )
+        cache_shardings = (cache_sh, scale_sh, cache_sh, scale_sh)
+    else:
+        cache_sds = (sds(kv_shape, cfg.dtype), sds(kv_shape, cfg.dtype))
+        cache_shardings = (cache_sh, cache_sh)
+
+    def decode(params, token, pos, cache):
+        return tfm.decode_step(params, token, pos, cache, cfg)
+
+    attn_flops = 4.0 * b * cfg.n_heads * cfg.head_dim * s
+    return DryRunSpec(
+        step_fn=decode,
+        args=(params_sds, sds((b,), jnp.int32), sds((), jnp.int32), cache_sds),
+        in_shardings=(
+            param_sh,
+            named(mesh, batch_axis),
+            rep(mesh),
+            cache_shardings,
+        ),
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(3,),
+        description=f"{cfg.name} decode S={s} B={b} kv_quant={kv_quant}",
+        model_flops=2.0 * cfg.n_active_params() * b + attn_flops,
+        n_params=cfg.n_params(),
+        tokens_per_step=b,
+    )
+
+
+def lm_smoke_config(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    """Same family, tiny dims, fp32 — one train step must run on CPU."""
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=96 if not cfg.is_moe else 32,
+        vocab_size=250,   # pads to 256: the vocab-padding path stays covered
+        vocab_pad=64,
+        n_experts=min(cfg.n_experts, 8),
+        top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+        dtype=jnp.float32,
+        remat=False,
+    )

@@ -1,0 +1,66 @@
+"""Core library: the paper's parallel *forward* triangle-counting algorithm.
+
+Public API::
+
+    from repro.core import count_triangles, transitivity, preprocess
+
+    t = count_triangles(edge_array)                     # exact, on device
+    t = count_triangles(edge_array, method="pallas")    # Pallas kernel path
+    t = count_triangles_distributed(edge_array, mesh)   # multi-pod
+"""
+from .preprocess import OrientedCSR, preprocess, preprocess_host_offload, degrees
+from .count import (
+    WedgePlan,
+    make_wedge_plan,
+    count_wedges_found,
+    count_triangles_csr,
+    count_triangles,
+    per_node_triangles,
+    bucketize_edges,
+    gather_panels,
+    panel_intersect_count,
+)
+from .clustering import (
+    local_clustering_coefficient,
+    average_clustering_coefficient,
+    transitivity,
+    node_triangle_features,
+)
+from .baseline import (
+    count_triangles_sequential,
+    count_triangles_numpy,
+    count_triangles_bruteforce,
+)
+from .approx import count_triangles_doulion
+from .distributed import (
+    stripe_edges,
+    make_distributed_count_fn,
+    count_triangles_distributed,
+)
+
+__all__ = [
+    "OrientedCSR",
+    "preprocess",
+    "preprocess_host_offload",
+    "degrees",
+    "WedgePlan",
+    "make_wedge_plan",
+    "count_wedges_found",
+    "count_triangles_csr",
+    "count_triangles",
+    "per_node_triangles",
+    "bucketize_edges",
+    "gather_panels",
+    "panel_intersect_count",
+    "local_clustering_coefficient",
+    "average_clustering_coefficient",
+    "transitivity",
+    "node_triangle_features",
+    "count_triangles_sequential",
+    "count_triangles_numpy",
+    "count_triangles_bruteforce",
+    "count_triangles_doulion",
+    "stripe_edges",
+    "make_distributed_count_fn",
+    "count_triangles_distributed",
+]

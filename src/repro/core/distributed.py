@@ -1,0 +1,270 @@
+"""Distributed triangle counting (paper §III-E scaled to a 512-chip mesh).
+
+The paper's multi-GPU scheme: preprocess once, replicate the CSR arrays to
+every device, partition the *edge list*, reduce partial counts.  We keep
+that exact structure under ``shard_map``:
+
+* the oriented CSR (``row_offsets``, ``col``, ``out_degree``) is replicated
+  (it is the read-only "texture" data of the kernel),
+* the directed edge list is **striped round-robin** across every mesh axis
+  — the same modulo-striping the paper uses to assign edges to threads
+  (§III-C), which statistically balances the wedge workload under skewed
+  degree distributions,
+* each shard expands its edges into wedge candidates and closes them with
+  the batched binary search from :mod:`repro.core.count`,
+* partial counts meet in a single ``psum`` (the paper's final
+  ``thrust::reduce``).
+
+The counting step is Amdahl-free; preprocessing is replicated (as in the
+paper, where it runs on one GPU).  §Perf in EXPERIMENTS.md quantifies the
+preprocessing fraction exactly as the paper's §III-E does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .count import _batched_contains
+from .preprocess import OrientedCSR, preprocess
+
+__all__ = [
+    "stripe_edges",
+    "make_distributed_count_fn",
+    "make_distributed_panel_count_fn",
+    "count_triangles_distributed",
+    "count_triangles_distributed_panel",
+]
+
+
+def stripe_edges(csr: OrientedCSR, n_shards: int, shorter_side: bool = False):
+    """Round-robin stripe directed edges into ``(n_shards, e_per_shard)``.
+
+    Shard ``s`` receives directed edges ``s, s + S, s + 2S, …`` (−1 padded),
+    mirroring the paper's thread-striping.  Returns host arrays
+    ``(src_sh, dst_sh, wedges_per_shard_max)``.
+
+    ``shorter_side`` sizes the wedge buffer for the §Perf variant that
+    enumerates candidates from the *smaller* endpoint list.
+    """
+    src = np.asarray(csr.src)
+    dst = np.asarray(csr.col)
+    out_deg = np.asarray(csr.out_degree)
+    m = src.shape[0]
+    e_per = -(-m // n_shards)
+    pad = e_per * n_shards - m
+    src_p = np.concatenate([src, np.full(pad, -1, np.int32)])
+    dst_p = np.concatenate([dst, np.full(pad, -1, np.int32)])
+    # reshape(e_per, S).T puts edge i on shard i % S — round-robin striping
+    src_sh = np.ascontiguousarray(src_p.reshape(e_per, n_shards).T)
+    dst_sh = np.ascontiguousarray(dst_p.reshape(e_per, n_shards).T)
+    reps = np.where(src_p >= 0, out_deg[np.maximum(src_p, 0)], 0)
+    if shorter_side:
+        reps_v = np.where(dst_p >= 0, out_deg[np.maximum(dst_p, 0)], 0)
+        reps = np.minimum(reps, reps_v)
+    w_per_shard = reps.reshape(e_per, n_shards).sum(axis=0)
+    return src_sh, dst_sh, int(w_per_shard.max()) if m else 1
+
+
+def make_distributed_count_fn(
+    mesh: Mesh,
+    wedge_budget: int,
+    n_search_steps: int,
+    axis_names: Sequence[str] | None = None,
+    shorter_side: bool = False,
+):
+    """Build the jitted sharded counting step.
+
+    ``wedge_budget`` is the per-shard wedge-buffer length (static), computed
+    by :func:`stripe_edges`; ``n_search_steps`` bounds the binary search.
+    Edge shards live on the product of every mesh axis; the CSR is
+    replicated.  Returns ``f(src_sh, dst_sh, row_offsets, col, out_degree)
+    -> per-shard partial counts (n_shards,) int32``.
+
+    ``shorter_side`` (§Perf): enumerate wedge candidates from the *smaller*
+    of N⁺(u), N⁺(v) and binary-search the larger — |N⁺(u) ∩ N⁺(v)| is
+    symmetric, so the count is identical while the probe count drops from
+    Σ deg⁺(u) to Σ min(deg⁺(u), deg⁺(v)).
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+
+    def shard_body(src_e, dst_e, row_offsets, col, out_deg):
+        src_e = src_e.reshape(-1)
+        dst_e = dst_e.reshape(-1)
+        m_local = src_e.shape[0]
+        valid_e = src_e >= 0
+        safe_src = jnp.maximum(src_e, 0)
+        safe_dst = jnp.maximum(dst_e, 0)
+        if shorter_side:
+            du = out_deg[safe_src]
+            dv = out_deg[safe_dst]
+            swap = dv < du
+            enum_v = jnp.where(swap, safe_dst, safe_src)   # enumerate this list
+            probe_v = jnp.where(swap, safe_src, safe_dst)  # search in this one
+            reps = jnp.where(valid_e, jnp.minimum(du, dv), 0)
+        else:
+            enum_v = safe_src
+            probe_v = safe_dst
+            reps = jnp.where(valid_e, out_deg[safe_src], 0)
+        starts = jnp.cumsum(reps) - reps
+        edge_id = jnp.repeat(
+            jnp.arange(m_local, dtype=jnp.int32),
+            reps,
+            total_repeat_length=wedge_budget,
+        )
+        pos = jnp.arange(wedge_budget, dtype=jnp.int32) - starts[edge_id]
+        valid = (pos >= 0) & (pos < reps[edge_id])
+        u = enum_v[edge_id]
+        v = probe_v[edge_id]
+        w_idx = jnp.clip(row_offsets[u] + pos, 0, col.shape[0] - 1)
+        w = col[w_idx]
+        found = _batched_contains(
+            col, row_offsets[v], row_offsets[v + 1], w, n_search_steps
+        )
+        partial = jnp.sum(found & valid, dtype=jnp.int32)
+        return partial.reshape((1,) * len(axes))
+
+    edge_spec = P(axes)  # edge-shard dim split over the flattened mesh
+    rep = P()
+    f = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(edge_spec, edge_spec, rep, rep, rep),
+        out_specs=P(*axes),
+    )
+    return jax.jit(f)
+
+
+def make_distributed_panel_count_fn(
+    mesh: Mesh,
+    edges_per_shard_by_width: dict[int, int],
+    axis_names: Sequence[str] | None = None,
+):
+    """§Perf: distributed *panel* schedule — the Pallas kernel's dataflow.
+
+    Instead of ``log₂(deg_max)`` random gathers per wedge probe, each edge
+    streams both endpoint neighbor panels exactly once and closes the
+    intersection with an equality-tile reduction (compares stay in
+    registers/VMEM).  Edges are bucketed by panel width; the per-shard
+    bucket sizes are static.  Takes per-width striped ``(n_shards, e_w)``
+    src/dst arrays + the replicated CSR; returns per-shard int32 partials.
+    """
+    axes = tuple(axis_names or mesh.axis_names)
+    widths = sorted(edges_per_shard_by_width)
+
+    def shard_body(*args):
+        n_w = len(widths)
+        srcs = args[:n_w]
+        dsts = args[n_w : 2 * n_w]
+        row_offsets, col, out_deg = args[2 * n_w :]
+        total = jnp.int32(0)
+        m_dir = col.shape[0]
+        for width, src_e, dst_e in zip(widths, srcs, dsts):
+            src_e = src_e.reshape(-1)
+            dst_e = dst_e.reshape(-1)
+            valid_e = src_e >= 0
+            u = jnp.maximum(src_e, 0)
+            v = jnp.maximum(dst_e, 0)
+            lane = jnp.arange(width, dtype=jnp.int32)
+
+            def panel(base, length):
+                idx = jnp.clip(base[:, None] + lane[None, :], 0, m_dir - 1)
+                vals = col[idx]
+                return jnp.where(lane[None, :] < length[:, None], vals, -1)
+
+            a = panel(row_offsets[u], out_deg[u])   # (E_w, width)
+            b = panel(row_offsets[v], out_deg[v])
+            eq = (a[:, :, None] == b[:, None, :]) & (a[:, :, None] >= 0)
+            counts = jnp.sum(eq, axis=(1, 2), dtype=jnp.int32)
+            total = total + jnp.sum(
+                jnp.where(valid_e, counts, 0), dtype=jnp.int32
+            )
+        return total.reshape((1,) * len(axes))
+
+    edge_spec = P(axes)
+    rep = P()
+    in_specs = tuple([edge_spec] * (2 * len(widths)) + [rep, rep, rep])
+    f = shard_map(shard_body, mesh=mesh, in_specs=in_specs, out_specs=P(*axes))
+    return jax.jit(f), widths
+
+
+def count_triangles_distributed(
+    edges, mesh: Mesh, n_nodes: int | None = None, shorter_side: bool = False
+) -> int:
+    """End-to-end distributed count (preprocess → stripe → sharded count)."""
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return 0
+    if n_nodes is None:
+        n_nodes = int(edges.max()) + 1
+    csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+    n_shards = int(np.prod(mesh.devices.shape))
+    src_sh, dst_sh, w_max = stripe_edges(csr, n_shards, shorter_side=shorter_side)
+    max_deg = int(np.asarray(csr.out_degree).max()) if n_nodes else 0
+    steps = max(1, int(np.ceil(np.log2(max_deg + 1)))) if max_deg else 1
+    count_fn = make_distributed_count_fn(
+        mesh, max(w_max, 1), steps, shorter_side=shorter_side
+    )
+    rep_sharding = NamedSharding(mesh, P())
+    partials = count_fn(
+        jax.device_put(src_sh, NamedSharding(mesh, P(mesh.axis_names))),
+        jax.device_put(dst_sh, NamedSharding(mesh, P(mesh.axis_names))),
+        jax.device_put(np.asarray(csr.row_offsets), rep_sharding),
+        jax.device_put(np.asarray(csr.col), rep_sharding),
+        jax.device_put(np.asarray(csr.out_degree), rep_sharding),
+    )
+    return int(np.asarray(partials).astype(np.uint64).sum())
+
+
+def count_triangles_distributed_panel(
+    edges,
+    mesh: Mesh,
+    n_nodes: int | None = None,
+    widths: tuple[int, ...] = (16, 64, 256, 1024, 4096, 16384),
+) -> int:
+    """End-to-end distributed count via the panel (Pallas-dataflow) schedule."""
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return 0
+    if n_nodes is None:
+        n_nodes = int(edges.max()) + 1
+    csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+    n_shards = int(np.prod(mesh.devices.shape))
+    src = np.asarray(csr.src)
+    dst = np.asarray(csr.col)
+    out_deg = np.asarray(csr.out_degree)
+    need = np.maximum(out_deg[src], out_deg[dst])
+    per_width_arrays = {}
+    lo = 0
+    for w in widths:
+        idx = np.nonzero((need > lo) & (need <= w))[0]
+        lo = w
+        e_per = max(1, -(-idx.size // n_shards))
+        pad = e_per * n_shards - idx.size
+        s = np.concatenate([src[idx], np.full(pad, -1, np.int32)])
+        d = np.concatenate([dst[idx], np.full(pad, -1, np.int32)])
+        per_width_arrays[w] = (
+            np.ascontiguousarray(s.reshape(e_per, n_shards).T.astype(np.int32)),
+            np.ascontiguousarray(d.reshape(e_per, n_shards).T.astype(np.int32)),
+        )
+    if int(need.max() if need.size else 0) > widths[-1]:
+        raise ValueError("widths too small for max out-degree")
+    fn, ws = make_distributed_panel_count_fn(
+        mesh, {w: per_width_arrays[w][0].shape[1] for w in widths}
+    )
+    rep_sh = NamedSharding(mesh, P())
+    edge_sh = NamedSharding(mesh, P(mesh.axis_names))
+    args = [jax.device_put(per_width_arrays[w][0], edge_sh) for w in ws]
+    args += [jax.device_put(per_width_arrays[w][1], edge_sh) for w in ws]
+    args += [
+        jax.device_put(np.asarray(csr.row_offsets), rep_sh),
+        jax.device_put(np.asarray(csr.col), rep_sh),
+        jax.device_put(np.asarray(csr.out_degree), rep_sh),
+    ]
+    partials = fn(*args)
+    return int(np.asarray(partials).astype(np.uint64).sum())

@@ -1,0 +1,9 @@
+"""Deterministic synthetic data pipelines with resumable iterator state."""
+from .synthetic import (
+    TokenPipeline,
+    din_batch,
+    graph_node_features,
+    lm_batch,
+)
+
+__all__ = ["TokenPipeline", "lm_batch", "din_batch", "graph_node_features"]

@@ -1,0 +1,15 @@
+"""Distributed runtime: sharding rules, compression, straggler handling."""
+from .sharding import ShardingRules, make_param_shardings, LM_RULES, spec_for
+from .compression import compressed_psum, make_error_feedback_state, compress_grads
+from .straggler import StragglerMonitor
+
+__all__ = [
+    "ShardingRules",
+    "make_param_shardings",
+    "spec_for",
+    "LM_RULES",
+    "compressed_psum",
+    "make_error_feedback_state",
+    "compress_grads",
+    "StragglerMonitor",
+]

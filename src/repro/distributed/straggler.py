@@ -1,0 +1,67 @@
+"""Straggler detection for the training loop.
+
+On a real pod a straggling host shows up as a slow step for *everyone*
+(collectives are synchronous).  The monitor keeps a robust running
+estimate (median + MAD over a sliding window) of step wall time and flags
+anomalies; the train loop's hook decides what to do with a flag —
+log-and-continue, checkpoint-now (before a suspected failing host dies),
+or trigger an elastic re-mesh.  The decision logic is host-side and fully
+unit-testable without hardware.
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+import time
+from typing import Callable
+
+__all__ = ["StragglerMonitor"]
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        window: int = 50,
+        threshold: float = 3.0,
+        min_samples: int = 10,
+        on_straggle: Callable[[int, float, float], None] | None = None,
+    ):
+        self.window = window
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.on_straggle = on_straggle
+        self.times: collections.deque[float] = collections.deque(maxlen=window)
+        self.flags: list[tuple[int, float]] = []
+        self._t0: float | None = None
+        self._step = 0
+
+    def start_step(self) -> None:
+        self._t0 = time.monotonic()
+
+    def end_step(self) -> bool:
+        """Record a step duration; returns True if the step straggled."""
+        assert self._t0 is not None, "start_step() not called"
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        """Pure observation API (used by tests with synthetic timings)."""
+        self._step += 1
+        straggled = False
+        if len(self.times) >= self.min_samples:
+            med = statistics.median(self.times)
+            mad = statistics.median(abs(t - med) for t in self.times) or (0.05 * med)
+            if dt > med + self.threshold * 1.4826 * mad and dt > 1.2 * med:
+                straggled = True
+                self.flags.append((self._step, dt))
+                if self.on_straggle is not None:
+                    self.on_straggle(self._step, dt, med)
+        # straggler steps do not poison the baseline window
+        if not straggled:
+            self.times.append(dt)
+        return straggled
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else float("nan")

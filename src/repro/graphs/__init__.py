@@ -1,0 +1,35 @@
+"""Graph data pipeline: generators, formats, samplers, batching."""
+from .formats import (
+    canonicalize_edges,
+    edge_array_to_csr,
+    csr_to_edge_array,
+    undirected_edge_count,
+    validate_edge_array,
+)
+from .generators import (
+    kronecker_rmat,
+    barabasi_albert,
+    watts_strogatz,
+    erdos_renyi,
+    GRAPH_GENERATORS,
+)
+from .sampling import SampledBlocks, sample_blocks
+from .batching import GraphBatch, collate_graphs, random_molecule_batch
+
+__all__ = [
+    "canonicalize_edges",
+    "edge_array_to_csr",
+    "csr_to_edge_array",
+    "undirected_edge_count",
+    "validate_edge_array",
+    "kronecker_rmat",
+    "barabasi_albert",
+    "watts_strogatz",
+    "erdos_renyi",
+    "GRAPH_GENERATORS",
+    "SampledBlocks",
+    "sample_blocks",
+    "GraphBatch",
+    "collate_graphs",
+    "random_molecule_batch",
+]

@@ -1,0 +1,84 @@
+"""Edge-array graph format utilities (host side, NumPy).
+
+The paper (§III-A) argues for the *edge array* as the canonical input
+format: an ``(m, 2)`` array of vertex-id pairs, no self loops, no
+multi-edges, every undirected edge present exactly twice (once per
+direction).  All generators and loaders in :mod:`repro.graphs` normalize to
+this representation via :func:`canonicalize_edges`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "canonicalize_edges",
+    "edge_array_to_csr",
+    "csr_to_edge_array",
+    "undirected_edge_count",
+    "validate_edge_array",
+]
+
+
+def canonicalize_edges(edges: np.ndarray, *, dtype=np.int32) -> np.ndarray:
+    """Normalize raw edge pairs to the paper's canonical edge array.
+
+    Removes self loops, deduplicates multi-edges, and emits every
+    undirected edge exactly twice (both directions).  Input may contain an
+    arbitrary mix of directions and duplicates.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    edges = edges[edges[:, 0] != edges[:, 1]]  # drop self loops
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    # Packed 64-bit keys: the paper's thrust::sort trick (§III-D2) — a
+    # single-key sort instead of a lexicographic pair sort.
+    key = lo << np.int64(32) | hi
+    key = np.unique(key)
+    lo = (key >> np.int64(32)).astype(dtype)
+    hi = (key & np.int64(0xFFFFFFFF)).astype(dtype)
+    fwd = np.stack([lo, hi], axis=1)
+    bwd = np.stack([hi, lo], axis=1)
+    return np.concatenate([fwd, bwd], axis=0)
+
+
+def validate_edge_array(edges: np.ndarray) -> None:
+    """Raise ``ValueError`` unless ``edges`` is a canonical edge array."""
+    edges = np.asarray(edges)
+    if edges.ndim != 2 or edges.shape[1] != 2:
+        raise ValueError(f"edge array must be (m, 2); got {edges.shape}")
+    if edges.shape[0] % 2 != 0:
+        raise ValueError("canonical edge array must have an even number of rows")
+    if (edges[:, 0] == edges[:, 1]).any():
+        raise ValueError("edge array contains self loops")
+    key = edges[:, 0].astype(np.int64) << 32 | edges[:, 1].astype(np.int64)
+    if np.unique(key).size != key.size:
+        raise ValueError("edge array contains duplicate edges")
+    rev = edges[:, 1].astype(np.int64) << 32 | edges[:, 0].astype(np.int64)
+    if not np.array_equal(np.sort(key), np.sort(rev)):
+        raise ValueError("edge array is not symmetric (each edge must appear twice)")
+
+
+def undirected_edge_count(edges: np.ndarray) -> int:
+    return int(np.asarray(edges).shape[0]) // 2
+
+
+def edge_array_to_csr(edges: np.ndarray, n_nodes: int | None = None):
+    """Convert a canonical edge array to CSR ``(row_offsets, col)``.
+
+    The paper notes (§III-A) this direction requires a sort and is the
+    expensive conversion; we provide it for interop and for the GNN stack.
+    """
+    edges = np.asarray(edges)
+    if n_nodes is None:
+        n_nodes = int(edges.max()) + 1 if edges.size else 0
+    order = np.lexsort((edges[:, 1], edges[:, 0]))
+    sorted_edges = edges[order]
+    row_offsets = np.searchsorted(sorted_edges[:, 0], np.arange(n_nodes + 1))
+    return row_offsets.astype(np.int64), sorted_edges[:, 1].copy()
+
+
+def csr_to_edge_array(row_offsets: np.ndarray, col: np.ndarray) -> np.ndarray:
+    """Single-pass CSR → edge array conversion (the cheap direction)."""
+    n = row_offsets.shape[0] - 1
+    src = np.repeat(np.arange(n, dtype=col.dtype), np.diff(row_offsets))
+    return np.stack([src, col], axis=1)

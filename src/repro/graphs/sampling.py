@@ -1,0 +1,55 @@
+"""Layer-wise uniform neighbor sampling (GraphSAGE ``minibatch_lg`` shape).
+
+Sampling is *with replacement* so every shape is static under ``jit``:
+a seed batch of ``B`` nodes with fanouts ``(f₁, f₂, …)`` produces frontiers
+of ``B``, ``B·f₁``, ``B·f₁·f₂``, … nodes.  Zero-degree nodes fall back to a
+self-loop so aggregation stays well-defined.
+
+The sampler consumes the same CSR arrays the triangle-counting core builds
+— one graph representation feeds both the analytics and the training stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SampledBlocks", "sample_blocks"]
+
+
+class SampledBlocks(NamedTuple):
+    """Frontier node ids per layer, innermost (deepest) last.
+
+    ``frontiers[0]`` is the seed batch ``(B,)``; ``frontiers[l]`` has shape
+    ``(B · Πᵢ<ₗ fᵢ,)``.  Layer ``l`` aggregation reduces ``frontiers[l+1]``
+    (reshaped ``(-1, f_l)``) into ``frontiers[l]``.
+    """
+
+    frontiers: tuple[jax.Array, ...]
+
+
+@functools.partial(jax.jit, static_argnames=("fanouts",))
+def sample_blocks(
+    key: jax.Array,
+    row_offsets: jax.Array,
+    col: jax.Array,
+    seeds: jax.Array,
+    fanouts: tuple[int, ...],
+) -> SampledBlocks:
+    """Sample a layered block subgraph rooted at ``seeds``."""
+    frontiers = [seeds.astype(jnp.int32)]
+    cur = frontiers[0]
+    for depth, fanout in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        deg = (row_offsets[cur + 1] - row_offsets[cur]).astype(jnp.int32)
+        u = jax.random.uniform(sub, (cur.shape[0], fanout))
+        pick = (u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+        idx = jnp.clip(row_offsets[cur][:, None] + pick, 0, col.shape[0] - 1)
+        nbrs = col[idx]
+        # zero-degree fallback: self-loop
+        nbrs = jnp.where(deg[:, None] > 0, nbrs, cur[:, None])
+        cur = nbrs.reshape(-1)
+        frontiers.append(cur)
+    return SampledBlocks(frontiers=tuple(frontiers))

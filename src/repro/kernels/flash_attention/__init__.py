@@ -1,0 +1,5 @@
+"""Pallas TPU flash-attention kernel (LM training/prefill hot spot)."""
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas"]

@@ -1,0 +1,24 @@
+"""Jit'd attention entry point with backend dispatch.
+
+``attention(..., backend="auto")`` picks the Pallas kernel on TPU and the
+memory-efficient jnp scan elsewhere; models call this so the same model
+code lowers on CPU (tests / dry-run) and TPU (production).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import flash_attention_jnp
+from .flash_attention import flash_attention_pallas
+
+__all__ = ["attention"]
+
+
+def attention(q, k, v, causal: bool = True, sm_scale: float | None = None, backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, sm_scale=sm_scale)
+    if backend == "jnp":
+        return flash_attention_jnp(q, k, v, causal=causal, sm_scale=sm_scale)
+    raise ValueError(f"unknown backend {backend!r}")

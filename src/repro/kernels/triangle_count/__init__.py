@@ -1,0 +1,5 @@
+"""Pallas TPU kernel for the triangle-counting intersection hot spot."""
+from . import ops, ref
+from .triangle_count import intersect_count_pallas
+
+__all__ = ["ops", "ref", "intersect_count_pallas"]

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the triangle-intersection kernel.
+
+Dispatches to the Pallas kernel (native on TPU, ``interpret=True`` on CPU)
+with the signature expected by ``repro.core.count._count_panel``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .triangle_count import intersect_count_pallas
+
+__all__ = ["intersect_count"]
+
+
+def intersect_count(
+    a: jax.Array, b: jax.Array, a_len: jax.Array | None = None, b_len: jax.Array | None = None
+) -> jax.Array:
+    """Per-row sorted-intersection sizes; lengths are implied by −1 padding."""
+    del a_len, b_len  # panels are −1 padded; masks are implicit
+    return intersect_count_pallas(a, b)

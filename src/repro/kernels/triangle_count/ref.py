@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the panel intersection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["intersect_count_ref"]
+
+
+def intersect_count_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Count matching entries between −1-padded sorted rows of a and b.
+
+    a: (B, Lu), b: (B, Lv) — any integer (or exactly-representable float)
+    dtype.  Returns (B,) int32.  Padding slots are −1 and never match
+    because valid vertex ids are ≥ 0.
+    """
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    return jnp.sum(eq & valid, axis=(1, 2), dtype=jnp.int32)

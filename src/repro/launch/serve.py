@@ -1,0 +1,73 @@
+"""Serving launcher: batched prefill + decode loop on local devices.
+
+Demonstrates the full inference path (prefill builds the KV cache; decode
+steps extend it) with batched requests and per-phase timing::
+
+    python -m repro.launch.serve --arch qwen2-1.5b --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    if mod.FAMILY != "lm":
+        raise SystemExit("serve.py drives LM archs; use examples/ for others")
+    cfg = mod.smoke_config()
+    key = jax.random.PRNGKey(args.seed)
+    params = tfm.init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    max_len = args.prompt_len + args.gen
+
+    prefill = jax.jit(lambda p, t: tfm.prefill(p, t, cfg))
+    decode = jax.jit(
+        lambda p, tok, pos, cache: tfm.decode_step(p, tok, pos, cache, cfg),
+        donate_argnums=(3,),
+    )
+
+    t0 = time.time()
+    last_logits, kv = prefill(params, prompts)
+    k0, v0 = tfm.init_kv_cache(cfg, args.batch, max_len, dtype=cfg.dtype)
+    k0 = jax.lax.dynamic_update_slice(k0, kv[0].astype(k0.dtype), (0, 0, 0, 0, 0))
+    v0 = jax.lax.dynamic_update_slice(v0, kv[1].astype(v0.dtype), (0, 0, 0, 0, 0))
+    cache = (k0, v0)
+    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, tok, jnp.int32(args.prompt_len + i), cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    toks = jnp.stack(out, axis=1)
+    print(f"prefill: {args.batch}×{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms")
+    print(
+        f"decode: {args.gen-1} steps × batch {args.batch} in {t_decode*1e3:.1f} ms "
+        f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.0f} tok/s)"
+    )
+    print("sample continuation ids:", toks[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

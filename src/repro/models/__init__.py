@@ -1,0 +1,5 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys."""
+from . import attention, gnn, recsys, transformer
+from .transformer import TransformerConfig
+
+__all__ = ["attention", "transformer", "gnn", "recsys", "TransformerConfig"]

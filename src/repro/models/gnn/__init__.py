@@ -1,0 +1,18 @@
+"""GNN model zoo: GCN, GraphSAGE, SchNet, EGNN on segment-op message passing."""
+from . import common, egnn, gcn, graphsage, schnet
+from .egnn import EGNNConfig
+from .gcn import GCNConfig
+from .graphsage import SAGEConfig
+from .schnet import SchNetConfig
+
+__all__ = [
+    "common",
+    "gcn",
+    "graphsage",
+    "schnet",
+    "egnn",
+    "GCNConfig",
+    "SAGEConfig",
+    "SchNetConfig",
+    "EGNNConfig",
+]

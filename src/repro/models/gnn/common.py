@@ -1,0 +1,84 @@
+"""Shared message-passing primitives for all GNN architectures.
+
+JAX has no CSR/CSC sparse kernels (BCOO only), so message passing is built
+directly on gather → elementwise → ``segment_sum`` scatter over an
+edge-index list — the same SoA edge array the triangle-counting core uses.
+Padded edges carry ``src == -1`` and are masked out of every reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "edge_mask",
+    "gather_src",
+    "scatter_sum",
+    "scatter_mean",
+    "scatter_max",
+    "degrees_from_edges",
+    "mlp_init",
+    "mlp_apply",
+]
+
+
+def edge_mask(edge_src: jax.Array, edge_dst: jax.Array) -> jax.Array:
+    return (edge_src >= 0) & (edge_dst >= 0)
+
+
+def gather_src(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather rows with −1-safe indices (clamped; caller masks)."""
+    return jnp.take(x, jnp.maximum(idx, 0), axis=0)
+
+
+def scatter_sum(messages: jax.Array, dst: jax.Array, n_nodes: int, mask=None) -> jax.Array:
+    if mask is not None:
+        messages = messages * mask[..., None].astype(messages.dtype)
+    return jax.ops.segment_sum(messages, jnp.maximum(dst, 0), num_segments=n_nodes)
+
+
+def scatter_mean(messages: jax.Array, dst: jax.Array, n_nodes: int, mask=None) -> jax.Array:
+    s = scatter_sum(messages, dst, n_nodes, mask)
+    ones = jnp.ones(messages.shape[:1], messages.dtype)
+    if mask is not None:
+        ones = ones * mask.astype(messages.dtype)
+    cnt = jax.ops.segment_sum(ones, jnp.maximum(dst, 0), num_segments=n_nodes)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(messages: jax.Array, dst: jax.Array, n_nodes: int, mask=None) -> jax.Array:
+    if mask is not None:
+        neg = jnp.full_like(messages, -1e30)
+        messages = jnp.where(mask[..., None], messages, neg)
+    out = jax.ops.segment_max(messages, jnp.maximum(dst, 0), num_segments=n_nodes)
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def degrees_from_edges(dst: jax.Array, n_nodes: int, mask=None) -> jax.Array:
+    ones = jnp.ones(dst.shape[0], jnp.float32)
+    if mask is not None:
+        ones = ones * mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, jnp.maximum(dst, 0), num_segments=n_nodes)
+
+
+def mlp_init(key, sizes, param_dtype=jnp.float32):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append(
+            {
+                "w": (jax.random.normal(k1, (a, b), jnp.float32) * a ** -0.5).astype(param_dtype),
+                "b": jnp.zeros((b,), param_dtype),
+            }
+        )
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"].astype(x.dtype) + layer["b"].astype(x.dtype)
+        if i < len(params) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x

@@ -1,0 +1,75 @@
+"""EGNN (Satorras et al., arXiv:2102.09844): E(n)-equivariant GNN.
+
+Scalar messages from invariant distances; coordinates updated along
+relative-position vectors — equivariance without spherical harmonics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import edge_mask, gather_src, mlp_apply, mlp_init, scatter_mean, scatter_sum
+
+__all__ = ["EGNNConfig", "init_params", "apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    d_out: int = 1
+    update_coords: bool = True
+    dtype: object = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: EGNNConfig) -> dict:
+    d = cfg.d_hidden
+    key, k_in = jax.random.split(key)
+    params = {
+        "embed": jax.random.normal(k_in, (cfg.d_in, d), jnp.float32) * cfg.d_in ** -0.5,
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        params["layers"].append(
+            {
+                "phi_e": mlp_init(k1, [2 * d + 1, d, d]),
+                "phi_x": mlp_init(k2, [d, d, 1]),
+                "phi_h": mlp_init(k3, [2 * d, d, d]),
+            }
+        )
+    key, k_out = jax.random.split(key)
+    params["readout"] = mlp_init(k_out, [d, d, cfg.d_out])
+    return params
+
+
+def apply(
+    params: dict,
+    cfg: EGNNConfig,
+    node_feat: jax.Array,   # (N, d_in)
+    positions: jax.Array,   # (N, 3)
+    edge_src: jax.Array = None,
+    edge_dst: jax.Array = None,
+) -> jax.Array:
+    n = node_feat.shape[0]
+    mask = edge_mask(edge_src, edge_dst)
+    h = (node_feat @ params["embed"]).astype(cfg.dtype)
+    x = positions.astype(cfg.dtype)
+    for layer in params["layers"]:
+        hi = gather_src(h, edge_dst)   # receiving node i
+        hj = gather_src(h, edge_src)   # sending node j
+        xi = gather_src(x, edge_dst)
+        xj = gather_src(x, edge_src)
+        diff = xi - xj                 # (E, 3)
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = mlp_apply(layer["phi_e"], jnp.concatenate([hi, hj, d2], axis=-1))  # (E, d)
+        if cfg.update_coords:
+            coef = jnp.tanh(mlp_apply(layer["phi_x"], m))  # bounded for stability
+            x = x + scatter_mean(diff * coef, edge_dst, n, mask)
+        agg = scatter_sum(m, edge_dst, n, mask)
+        h = h + mlp_apply(layer["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    return mlp_apply(params["readout"], h)

@@ -1,0 +1,91 @@
+"""GraphSAGE (Hamilton et al., arXiv:1706.02216), mean aggregator.
+
+Two entry points:
+* :func:`apply` — full-graph layout (edge-index message passing),
+* :func:`apply_blocks` — layered minibatch layout fed by the fanout
+  sampler in :mod:`repro.graphs.sampling` (the ``minibatch_lg`` shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import edge_mask, gather_src, scatter_mean
+
+__all__ = ["SAGEConfig", "init_params", "apply", "apply_blocks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    d_out: int = 41
+    sample_sizes: tuple[int, ...] = (25, 10)
+    dtype: object = jnp.float32
+
+
+def init_params(key: jax.Array, cfg: SAGEConfig) -> dict:
+    sizes = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    layers = []
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append(
+            {
+                "w_self": jax.random.normal(k1, (a, b), jnp.float32) * a ** -0.5,
+                "w_neigh": jax.random.normal(k2, (a, b), jnp.float32) * a ** -0.5,
+                "b": jnp.zeros((b,), jnp.float32),
+            }
+        )
+    return {"layers": layers}
+
+
+def _combine(layer, h_self, h_neigh, final: bool):
+    out = (
+        h_self @ layer["w_self"].astype(h_self.dtype)
+        + h_neigh @ layer["w_neigh"].astype(h_self.dtype)
+        + layer["b"].astype(h_self.dtype)
+    )
+    return out if final else jax.nn.relu(out)
+
+
+def apply(
+    params: dict,
+    cfg: SAGEConfig,
+    node_feat: jax.Array,
+    positions=None,
+    edge_src: jax.Array = None,
+    edge_dst: jax.Array = None,
+) -> jax.Array:
+    n = node_feat.shape[0]
+    mask = edge_mask(edge_src, edge_dst)
+    x = node_feat.astype(cfg.dtype)
+    for i, layer in enumerate(params["layers"]):
+        h_neigh = scatter_mean(gather_src(x, edge_src), edge_dst, n, mask)
+        x = _combine(layer, x, h_neigh, i == len(params["layers"]) - 1)
+    return x
+
+
+def apply_blocks(params: dict, cfg: SAGEConfig, frontier_feats: list, fanouts) -> jax.Array:
+    """Layered minibatch forward.
+
+    ``frontier_feats[l]`` holds features of sampler frontier ``l``
+    (seeds first); len == n_layers + 1.  Aggregation runs deepest-first.
+    """
+    feats = [f.astype(cfg.dtype) for f in frontier_feats]
+    n_layers = len(params["layers"])
+    # h[l] starts as raw features of frontier l; each GNN layer collapses
+    # the deepest remaining frontier into its parent.
+    h = list(feats)
+    for li, layer in enumerate(params["layers"]):
+        new_h = []
+        for depth in range(len(h) - 1):
+            parent = h[depth]
+            child = h[depth + 1].reshape(parent.shape[0], fanouts[depth], -1)
+            h_neigh = jnp.mean(child, axis=1)
+            new_h.append(_combine(layer, parent, h_neigh, li == n_layers - 1))
+        h = new_h
+    return h[0]

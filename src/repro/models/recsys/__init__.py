@@ -1,0 +1,13 @@
+"""RecSys stack: DIN + EmbeddingBag built on take/segment_sum."""
+from . import din, embedding
+from .din import DINConfig
+from .embedding import embedding_bag, embedding_lookup, hash_bucket
+
+__all__ = [
+    "din",
+    "embedding",
+    "DINConfig",
+    "embedding_bag",
+    "embedding_lookup",
+    "hash_bucket",
+]

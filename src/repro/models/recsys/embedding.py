@@ -1,0 +1,51 @@
+"""EmbeddingBag and sparse-table utilities for the recsys stack.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse ops, so the bag
+reduce is built from ``jnp.take`` + ``jax.ops.segment_sum`` — per the
+taxonomy, this IS part of the system.  Tables are row-shardable: the
+gather lowers to a sharded gather + psum of partials under pjit when the
+table carries a ``P("model", None)`` sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["embedding_lookup", "embedding_bag", "hash_bucket"]
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain row gather; −1 ids return zero rows (padding)."""
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    return jnp.where((ids >= 0)[..., None], rows, 0.0)
+
+
+def embedding_bag(
+    table: jax.Array,      # (V, d)
+    ids: jax.Array,        # (n_indices,) flat multi-hot indices, −1 padded
+    segments: jax.Array,   # (n_indices,) bag id per index
+    n_bags: int,
+    mode: str = "sum",
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: ragged gather + segment reduce."""
+    rows = embedding_lookup(table, ids)
+    seg = jnp.maximum(segments, 0)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, seg, num_segments=n_bags)
+        cnt = jax.ops.segment_sum(
+            (ids >= 0).astype(table.dtype), seg, num_segments=n_bags
+        )
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        neg = jnp.where((ids >= 0)[..., None], rows, -1e30)
+        out = jax.ops.segment_max(neg, seg, num_segments=n_bags)
+        return jnp.where(out > -1e29, out, 0.0)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def hash_bucket(raw_ids: jax.Array, n_buckets: int) -> jax.Array:
+    """Multiplicative hashing for open-vocabulary ids (QR-trick companion)."""
+    h = (raw_ids.astype(jnp.uint32) * jnp.uint32(2654435761)) % jnp.uint32(n_buckets)
+    return h.astype(jnp.int32)

@@ -1,0 +1,400 @@
+"""Decoder-only GQA transformer covering all five assigned LM architectures.
+
+Design notes:
+
+* **scan over layers** — layer parameters are stacked along a leading axis
+  and the depth loop is a single ``lax.scan``; HLO size and compile time
+  are depth-independent (essential for the 62-layer deepseek config at 512
+  fake devices).
+* **GQA flash attention** — the scan-based blockwise softmax from
+  :mod:`repro.models.attention`; the Pallas kernel is the TPU drop-in.
+* **MoE** — sort-based token routing through ``jax.lax.ragged_dot``:
+  tokens are replicated ``top_k`` times, sorted by expert, processed by a
+  single grouped matmul, unsorted, and combined with router weights.  No
+  capacity dropping, no (T, E, C) one-hot dispatch tensors.
+* **remat** — each layer body is ``jax.checkpoint``'d under the scan, so
+  the backward pass stores only per-layer inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    apply_rope,
+    decode_attention,
+    decode_attention_int8,
+    flash_attention_jnp,
+    quantize_kv_token,
+    rope,
+)
+
+__all__ = [
+    "TransformerConfig",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_kv_cache",
+    "init_kv_cache_int8",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    n_experts: int = 0       # 0 → dense FFN
+    top_k: int = 0
+    norm_eps: float = 1e-5
+    vocab_pad: int = 512     # vocab-parallel tables round up to this
+    onehot_ce: bool = False  # §Perf: CE via one-hot einsum (vocab-sharding
+                             # friendly: no logits all-gather at the loss)
+    kv_quant: bool = False   # §Perf: int8 KV cache + int8×int8 decode dots
+    dtype: Any = jnp.bfloat16        # activation/compute dtype
+    param_dtype: Any = jnp.float32   # master parameter dtype
+    remat: bool = True
+    remat_policy: str = "full"       # "full" | "dots" (§Perf: save matmul
+                                     # outputs, replay only elementwise)
+    attn_block_k: int = 512
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style vocab padding: tables round up to a multiple of
+        ``vocab_pad`` so the vocab-parallel dim divides any mesh axis we
+        use; padded logit columns are masked to −∞ before the softmax."""
+        return -(-self.vocab_size // self.vocab_pad) * self.vocab_pad
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def bytes_per_param(self) -> int:
+        return jnp.dtype(self.param_dtype).itemsize
+
+    def n_params(self) -> int:
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.is_moe:
+            mlp = self.n_experts * (3 * d * ff) + d * self.n_experts
+        else:
+            mlp = 3 * d * ff
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        hd = self.head_dim
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        mlp = self.top_k * (3 * d * ff) + d * self.n_experts
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab_size * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_layer_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    p = {
+        "rms_attn": jnp.ones((d,), pd),
+        "rms_mlp": jnp.ones((d,), pd),
+        "wq": _dense_init(ks[0], (d, h * hd), pd),
+        "wk": _dense_init(ks[1], (d, kv * hd), pd),
+        "wv": _dense_init(ks[2], (d, kv * hd), pd),
+        "wo": _dense_init(ks[3], (h * hd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), pd)
+        p["bk"] = jnp.zeros((kv * hd,), pd)
+        p["bv"] = jnp.zeros((kv * hd,), pd)
+    if cfg.is_moe:
+        e, ff = cfg.n_experts, cfg.d_ff
+        p["router"] = _dense_init(ks[4], (d, e), pd)
+        p["w_gate"] = _dense_init(ks[5], (e, d, ff), pd)
+        p["w_up"] = _dense_init(ks[6], (e, d, ff), pd)
+        p["w_down"] = _dense_init(ks[7], (e, ff, d), pd)
+    else:
+        ff = cfg.d_ff
+        p["w_gate"] = _dense_init(ks[5], (d, ff), pd)
+        p["w_up"] = _dense_init(ks[6], (d, ff), pd)
+        p["w_down"] = _dense_init(ks[7], (ff, d), pd)
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg))(layer_keys)
+    return {
+        "embed": _dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), cfg.param_dtype, 1.0),
+        "lm_head": _dense_init(k_head, (cfg.d_model, cfg.padded_vocab), cfg.param_dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "layers": layers,
+    }
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _swiglu(h: jax.Array, p: dict, dtype) -> jax.Array:
+    g = h @ p["w_gate"].astype(dtype)
+    u = h @ p["w_up"].astype(dtype)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(dtype) * u) @ p["w_down"].astype(dtype)
+
+
+def _moe(h: jax.Array, p: dict, cfg: TransformerConfig) -> jax.Array:
+    """Sort-based top-k MoE with a grouped (ragged) matmul.
+
+    h: (T, d) flattened tokens → (T, d).
+    """
+    t, d = h.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (h @ p["router"].astype(h.dtype)).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                          # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)          # renormalize
+    flat_e = top_e.reshape(-1)                                      # (T·k,)
+    order = jnp.argsort(flat_e)                                     # stable
+    token_of = order // k                                           # source token per row
+    xs = jnp.take(h, token_of, axis=0)                              # (T·k, d) sorted by expert
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    g = jax.lax.ragged_dot(xs, p["w_gate"].astype(h.dtype), group_sizes)
+    u = jax.lax.ragged_dot(xs, p["w_up"].astype(h.dtype), group_sizes)
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+    out = jax.lax.ragged_dot(act, p["w_down"].astype(h.dtype), group_sizes)  # (T·k, d)
+    w_sorted = jnp.take(top_w.reshape(-1), order).astype(out.dtype)
+    out = out * w_sorted[:, None]
+    combined = jnp.zeros((t, d), out.dtype).at[token_of].add(out)
+    return combined
+
+
+def _attention_block(x, p, cfg: TransformerConfig, sin, cos):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    o = flash_attention_jnp(q, k, v, causal=True, block_k=cfg.attn_block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return o @ p["wo"].astype(dt), k, v
+
+
+def _layer(x, p, cfg: TransformerConfig, sin, cos):
+    attn_out, k, v = _attention_block(rms_norm(x, p["rms_attn"], cfg.norm_eps), p, cfg, sin, cos)
+    x = x + attn_out
+    hmid = rms_norm(x, p["rms_mlp"], cfg.norm_eps)
+    if cfg.is_moe:
+        b, s, d = hmid.shape
+        mlp = _moe(hmid.reshape(b * s, d), p, cfg).reshape(b, s, d)
+    else:
+        mlp = _swiglu(hmid, p, x.dtype)
+    return x + mlp, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / serving
+# ---------------------------------------------------------------------------
+
+
+def _mask_pad_vocab(logits: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad_col = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    return jnp.where(pad_col, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def forward(
+    params: dict, tokens: jax.Array, cfg: TransformerConfig, return_kv: bool = False
+):
+    """tokens: (B, S) int32 → logits (B, S, V) [+ stacked KV caches]."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    sin, cos = rope(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+
+    def body(x, layer_p):
+        x, kvs = _layer(x, layer_p, cfg, sin, cos)
+        return x, kvs if return_kv else None
+
+    body_fn = body
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_saveable
+            if cfg.remat_policy == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        body_fn = jax.checkpoint(body, policy=policy)
+    x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    logits = _mask_pad_vocab(logits, cfg)
+    if return_kv:
+        # kvs: tuple of (L, B, KV, S, hd) arrays → transpose to cache layout
+        k = kvs[0].transpose(0, 1, 2, 3, 4)
+        v = kvs[1].transpose(0, 1, 2, 3, 4)
+        return logits, (k, v)
+    return logits
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig) -> jax.Array:
+    """Next-token cross entropy; batch = {tokens, labels, mask?}.
+
+    With ``cfg.onehot_ce`` the label log-prob is extracted with a one-hot
+    contraction instead of ``take_along_axis``: a gather along a
+    vocab-sharded axis forces GSPMD to all-gather the logits, whereas the
+    contraction partitions cleanly (each vocab shard contributes its
+    partial dot; the psum is one scalar per token).
+    """
+    logits = forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    if cfg.onehot_ce:
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        shifted = logits - jax.lax.stop_gradient(m)
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+        onehot = jax.nn.one_hot(batch["labels"], cfg.padded_vocab, dtype=logits.dtype)
+        picked = jnp.einsum("bsv,bsv->bs", shifted, onehot)
+        ll = picked - lse
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: TransformerConfig):
+    """Serving prefill: returns (last-position logits, KV caches)."""
+    logits, kv = forward(params, tokens, cfg, return_kv=True)
+    return logits[:, -1], kv
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def init_kv_cache_int8(cfg: TransformerConfig, batch: int, max_len: int):
+    """(k int8, k_scale f32, v int8, v_scale f32) — ~2.2× smaller than bf16."""
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    sshape = shape[:-1]
+    return (
+        jnp.zeros(shape, jnp.int8),
+        jnp.zeros(sshape, jnp.float32),
+        jnp.zeros(shape, jnp.int8),
+        jnp.zeros(sshape, jnp.float32),
+    )
+
+
+def decode_step(
+    params: dict,
+    token: jax.Array,        # (B,) int32 — the newest token
+    pos: jax.Array,          # scalar int32 — its position (= cache length)
+    kv_cache,                # (k, v) of (L, B, KV, S_max, hd), or the 4-tuple
+                             # (k_i8, k_scale, v_i8, v_scale) when cfg.kv_quant
+    cfg: TransformerConfig,
+):
+    """One greedy decode step; returns (logits (B, V), updated cache)."""
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.dtype)  # (B,1,d)
+    sin, cos = rope(jnp.asarray(pos)[None], cfg.head_dim, cfg.rope_theta)
+
+    def body(x, scanned):
+        layer_p, cache = scanned[0], scanned[1:]
+        h = rms_norm(x, layer_p["rms_attn"], cfg.norm_eps)
+        dt = x.dtype
+        hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        q = h @ layer_p["wq"].astype(dt)
+        k = h @ layer_p["wk"].astype(dt)
+        v = h @ layer_p["wv"].astype(dt)
+        if cfg.qkv_bias:
+            q = q + layer_p["bq"].astype(dt)
+            k = k + layer_p["bk"].astype(dt)
+            v = v + layer_p["bv"].astype(dt)
+        q = q.reshape(b, 1, nh, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, 1, nkv, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, 1, nkv, hd).transpose(0, 2, 1, 3)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        if cfg.kv_quant:
+            k_cache, k_s, v_cache, v_s = cache
+            kq, ks_tok, vq, vs_tok = quantize_kv_token(k, v)
+            k_cache = jax.lax.dynamic_update_slice(k_cache, kq, (0, 0, pos, 0))
+            v_cache = jax.lax.dynamic_update_slice(v_cache, vq, (0, 0, pos, 0))
+            k_s = jax.lax.dynamic_update_slice(k_s, ks_tok, (0, 0, pos))
+            v_s = jax.lax.dynamic_update_slice(v_s, vs_tok, (0, 0, pos))
+            o = decode_attention_int8(q, k_cache, k_s, v_cache, v_s, cache_len=pos + 1)
+            new_cache = (k_cache, k_s, v_cache, v_s)
+        else:
+            k_cache, v_cache = cache
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, 0, pos, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, 0, pos, 0)
+            )
+            o = decode_attention(q, k_cache, v_cache, cache_len=pos + 1)
+            new_cache = (k_cache, v_cache)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, nh * hd)
+        x = x + o @ layer_p["wo"].astype(dt)
+        hmid = rms_norm(x, layer_p["rms_mlp"], cfg.norm_eps)
+        if cfg.is_moe:
+            mlp = _moe(hmid.reshape(b, -1), layer_p, cfg).reshape(b, 1, -1)
+        else:
+            mlp = _swiglu(hmid, layer_p, dt)
+        return x + mlp, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], *kv_cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _mask_pad_vocab((x @ params["lm_head"].astype(cfg.dtype))[:, 0], cfg)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,14 @@
+"""Self-contained optimizers + schedules (no external deps)."""
+from .optimizers import OptState, adamw, sgd_momentum, clip_by_global_norm, apply_updates
+from .schedules import constant, cosine_with_warmup, linear_warmup
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "sgd_momentum",
+    "clip_by_global_norm",
+    "apply_updates",
+    "constant",
+    "cosine_with_warmup",
+    "linear_warmup",
+]

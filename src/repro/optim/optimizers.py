@@ -1,0 +1,112 @@
+"""Optimizers in the (init, update) functional style.
+
+Moment tensors inherit the parameter PartitionSpecs (ZeRO-style: whatever
+axis shards a weight shards its moments), so optimizer memory scales down
+with the mesh exactly like parameter memory.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "sgd_momentum", "clip_by_global_norm", "apply_updates"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict | None
+    nu: dict | None
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def adamw(
+    lr: Callable[[jax.Array], jax.Array] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float | None = 1.0,
+):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: OptState, params):
+        gnorm = None
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return updates, OptState(step=step, mu=mu, nu=nu), gnorm
+
+    return init, update
+
+
+def sgd_momentum(lr, momentum: float = 0.9, nesterov: bool = False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            nu=None,
+        )
+
+    def update(grads, state: OptState, params):
+        del params
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m):
+            g = g.astype(jnp.float32)
+            m = momentum * m + g
+            d = g + momentum * m if nesterov else m
+            return -lr_t * d, m
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        out = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        return updates, OptState(step=step, mu=mu, nu=None), None
+
+    return init, update

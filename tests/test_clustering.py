@@ -1,0 +1,46 @@
+"""Clustering coefficient / transitivity."""
+import numpy as np
+
+from repro.core import (
+    average_clustering_coefficient,
+    local_clustering_coefficient,
+    node_triangle_features,
+    transitivity,
+)
+from repro.graphs import canonicalize_edges
+
+
+def complete_graph(n):
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    return canonicalize_edges(np.array(pairs))
+
+
+def test_complete_graph_is_fully_clustered():
+    e = complete_graph(6)
+    cc = np.asarray(local_clustering_coefficient(e))
+    np.testing.assert_allclose(cc, 1.0)
+    assert abs(transitivity(e) - 1.0) < 1e-6
+
+
+def test_star_graph_has_zero_clustering():
+    e = canonicalize_edges(np.array([(0, i) for i in range(1, 7)]))
+    assert average_clustering_coefficient(e) == 0.0
+    assert transitivity(e) == 0.0
+
+
+def test_bounds(small_graphs):
+    for e in small_graphs.values():
+        cc = np.asarray(local_clustering_coefficient(e))
+        assert (cc >= 0).all() and (cc <= 1.0 + 1e-6).all()
+        t = transitivity(e)
+        assert 0.0 <= t <= 1.0
+
+
+def test_triangle_features_shape(small_graphs):
+    e = small_graphs["er"]
+    n = int(e.max()) + 1
+    f = np.asarray(node_triangle_features(e))
+    assert f.shape == (n, 3)
+    # degree column matches histogram
+    deg = np.bincount(e[:, 0], minlength=n)
+    np.testing.assert_array_equal(f[:, 0], deg)

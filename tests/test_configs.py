@@ -1,0 +1,60 @@
+"""Registry completeness + dry-run spec construction (no 512-dev compile;
+full-mesh compilation is exercised by ``repro.launch.dryrun`` and recorded
+in EXPERIMENTS.md — plus one subprocess cell here to keep it honest)."""
+import jax
+import pytest
+
+from conftest import run_multidevice
+from repro.configs import ALL_CELLS, ASSIGNED_CELLS, REGISTRY, get_arch
+
+EXPECTED_ARCHS = {
+    "olmoe-1b-7b", "granite-moe-3b-a800m", "deepseek-coder-33b", "llama3.2-3b",
+    "qwen2-1.5b", "schnet", "gcn-cora", "graphsage-reddit", "egnn", "din",
+    "triangles",
+}
+
+
+def test_registry_complete():
+    assert set(REGISTRY) == EXPECTED_ARCHS
+    assert len(ASSIGNED_CELLS) == 40  # 5 LM × 4 + 4 GNN × 4 + 1 recsys × 4
+    assert len(ALL_CELLS) == 40 + len(REGISTRY["triangles"].SHAPES)
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_arch("nope")
+
+
+def test_lm_full_configs_match_assignment():
+    c = REGISTRY["deepseek-coder-33b"].full_config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        62, 7168, 56, 8, 19200, 32256)
+    c = REGISTRY["olmoe-1b-7b"].full_config()
+    assert (c.n_experts, c.top_k, c.d_ff, c.vocab_size) == (64, 8, 1024, 50304)
+    c = REGISTRY["qwen2-1.5b"].full_config()
+    assert c.qkv_bias and c.n_kv_heads == 2 and c.vocab_size == 151936
+    c = REGISTRY["granite-moe-3b-a800m"].full_config()
+    assert (c.n_layers, c.n_experts, c.top_k) == (32, 40, 8)
+    c = REGISTRY["llama3.2-3b"].full_config()
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (28, 3072, 8192, 128256)
+
+
+def test_param_count_sanity():
+    assert abs(REGISTRY["deepseek-coder-33b"].full_config().n_params() - 33e9) / 33e9 < 0.1
+    olmoe = REGISTRY["olmoe-1b-7b"].full_config()
+    assert abs(olmoe.n_params() - 6.9e9) / 6.9e9 < 0.25       # ~7B total
+    assert abs(olmoe.n_active_params() - 1.3e9) / 1.3e9 < 0.35  # ~1B active
+
+
+@pytest.mark.slow
+def test_one_cell_lowers_and_compiles_on_8_devices():
+    out = run_multidevice("""
+import jax
+from repro.configs import get_arch
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+spec = get_arch("qwen2-1.5b").build_dryrun("decode_32k", mesh)
+with mesh:
+    compiled = spec.lower().compile()
+print("OK", compiled.cost_analysis() is not None)
+""")
+    assert "OK" in out

@@ -1,0 +1,132 @@
+"""Correctness of the counting core against the O(n³) oracle + properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    count_triangles,
+    count_triangles_bruteforce,
+    count_triangles_doulion,
+    count_triangles_numpy,
+    count_triangles_sequential,
+    preprocess,
+    preprocess_host_offload,
+)
+from repro.graphs import canonicalize_edges, validate_edge_array
+
+METHODS = ["wedge_bsearch", "panel", "pallas"]
+
+
+@st.composite
+def edge_arrays(draw):
+    n = draw(st.integers(2, 20))
+    n_raw = draw(st.integers(0, 60))
+    pairs = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=n_raw,
+            max_size=n_raw,
+        )
+    )
+    edges = canonicalize_edges(np.array(pairs + [(0, 1)], dtype=np.int64))
+    return edges
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_matches_bruteforce_fixed(small_graphs, method):
+    for name, e in small_graphs.items():
+        expect = count_triangles_bruteforce(e)
+        got = count_triangles(e, method=method)
+        assert got == expect, (name, method, got, expect)
+
+
+def test_cpu_baselines_match(small_graphs):
+    for name, e in small_graphs.items():
+        expect = count_triangles_bruteforce(e)
+        assert count_triangles_sequential(e) == expect, name
+        assert count_triangles_numpy(e) == expect, name
+
+
+@settings(max_examples=30, deadline=None)
+@given(edge_arrays())
+def test_property_matches_bruteforce(edges):
+    validate_edge_array(edges)
+    expect = count_triangles_bruteforce(edges)
+    assert count_triangles(edges, method="wedge_bsearch") == expect
+    assert count_triangles(edges, method="panel") == expect
+
+
+@settings(max_examples=15, deadline=None)
+@given(edge_arrays(), st.randoms())
+def test_property_row_permutation_invariant(edges, rnd):
+    perm = np.array(rnd.sample(range(edges.shape[0]), edges.shape[0]))
+    assert count_triangles(edges[perm]) == count_triangles(edges)
+
+
+@settings(max_examples=15, deadline=None)
+@given(edge_arrays(), st.integers(0, 2**31 - 1))
+def test_property_relabel_invariant(edges, seed):
+    n = int(edges.max()) + 1
+    perm = np.random.default_rng(seed).permutation(n)
+    assert count_triangles(perm[edges]) == count_triangles(edges)
+
+
+@settings(max_examples=10, deadline=None)
+@given(edge_arrays())
+def test_property_disjoint_triangle_adds_one(edges):
+    n = int(edges.max()) + 1
+    tri = canonicalize_edges(np.array([(n, n + 1), (n + 1, n + 2), (n, n + 2)]))
+    combined = np.concatenate([edges, tri])
+    assert count_triangles(combined) == count_triangles(edges) + 1
+
+
+def test_host_offload_preprocess_equals_device(small_graphs):
+    import jax.numpy as jnp
+
+    for name, e in small_graphs.items():
+        n = int(e.max()) + 1
+        a = preprocess(jnp.asarray(e), n_nodes=n)
+        b = preprocess_host_offload(e, n_nodes=n)
+        np.testing.assert_array_equal(np.asarray(a.row_offsets), np.asarray(b.row_offsets))
+        np.testing.assert_array_equal(np.asarray(a.col), np.asarray(b.col))
+
+
+def test_forward_orientation_invariants(small_graphs):
+    import jax.numpy as jnp
+
+    for e in small_graphs.values():
+        n = int(e.max()) + 1
+        csr = preprocess(jnp.asarray(e), n_nodes=n)
+        src = np.asarray(csr.src)
+        col = np.asarray(csr.col)
+        deg = np.asarray(csr.degree)
+        # exactly half the rows survive
+        assert src.shape[0] == e.shape[0] // 2
+        # every directed edge goes low→high in (degree, id) order
+        low = (deg[src] < deg[col]) | ((deg[src] == deg[col]) & (src < col))
+        assert low.all()
+        # adjacency sorted within rows
+        off = np.asarray(csr.row_offsets)
+        for u in range(n):
+            row = col[off[u]:off[u + 1]]
+            assert (np.diff(row) > 0).all()
+        # forward bound: out-degree ≤ sqrt(2m)
+        assert np.asarray(csr.out_degree).max() <= int(np.sqrt(e.shape[0])) + 1
+
+
+def test_doulion_p1_exact(small_graphs):
+    e = small_graphs["er"]
+    assert count_triangles_doulion(e, p=1.0) == count_triangles(e)
+
+
+def test_doulion_estimates(small_graphs):
+    e = small_graphs["kron"]
+    exact = count_triangles(e)
+    ests = [count_triangles_doulion(e, p=0.5, seed=s) for s in range(8)]
+    assert abs(np.mean(ests) - exact) / exact < 0.35
+
+
+def test_empty_and_tiny():
+    assert count_triangles(np.zeros((0, 2), np.int32)) == 0
+    two = canonicalize_edges(np.array([(0, 1)]))
+    assert count_triangles(two) == 0

@@ -1,0 +1,31 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+
+from repro.core import (
+    count_triangles,
+    count_triangles_numpy,
+    transitivity,
+)
+from repro.graphs import barabasi_albert, kronecker_rmat, watts_strogatz
+
+
+def test_paper_pipeline_kronecker():
+    """The paper's headline workload end-to-end at reduced scale:
+    generate a Kronecker graph, count exactly, agree with the CPU baseline."""
+    e = kronecker_rmat(10, seed=42)
+    t = count_triangles(e)
+    assert t == count_triangles_numpy(e)
+    assert t > 0
+
+
+def test_paper_pipeline_ba_ws():
+    for e in [barabasi_albert(500, 6, seed=1), watts_strogatz(800, 10, 0.1, seed=1)]:
+        assert count_triangles(e) == count_triangles_numpy(e)
+        assert 0.0 <= transitivity(e) <= 1.0
+
+
+def test_kronecker_triangle_growth():
+    """Paper Fig. 1: triangle count grows superlinearly with scale."""
+    t = [count_triangles(kronecker_rmat(s, edge_factor=8, seed=0)) for s in (8, 9, 10)]
+    assert t[0] < t[1] < t[2]
+    assert t[2] / t[1] > 1.5
