@@ -1,0 +1,49 @@
+"""Memory-bounded partitioning sweep: runtime vs `max_wedge_chunk`.
+
+Quantifies the cost of the engine's larger-than-memory discipline: the
+same graph counted with the wedge buffer capped at decreasing fractions
+of its full size.  Because every chunk pads to one static budget, the
+sweep compiles each kernel once — the runtime delta is pure launch
+overhead plus padding waste, which is the number the §Perf table in
+EXPERIMENTS.md tracks (the paper's analogue: edge-list passes on the 89M
+edge graph that exceeds the C2050's 3 GB, §III-E/Table I).
+"""
+from __future__ import annotations
+
+from repro.core import TriangleCounter
+from repro.graphs import kronecker_rmat
+
+from .common import timeit
+
+FRACTIONS = (1.0, 0.25, 0.0625, 0.015625)
+
+
+def run():
+    edges = kronecker_rmat(12, seed=0)
+    probe = TriangleCounter(method="wedge_bsearch")
+    expect = probe.count(edges)
+    total = probe.last_stats.total_wedges
+    rows = []
+    for frac in FRACTIONS:
+        budget = None if frac == 1.0 else max(int(total * frac), 1)
+        engine = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
+        t = engine.count(edges)
+        assert t == expect, (t, expect, budget)
+        us = timeit(lambda: engine.count(edges), warmup=1, iters=3)
+        st = engine.last_stats
+        rows.append((
+            f"engine/chunking/frac-{frac}",
+            us,
+            f"chunks={st.n_chunks};budget={st.peak_wedge_buffer};T={t}",
+        ))
+    # panel schedule under the same budget discipline
+    engine = TriangleCounter(method="panel", max_wedge_chunk=max(total // 16, 1))
+    t = engine.count(edges)
+    assert t == expect
+    us = timeit(lambda: engine.count(edges), warmup=1, iters=3)
+    rows.append((
+        "engine/chunking/panel-frac-0.0625",
+        us,
+        f"chunks={engine.last_stats.n_chunks};T={t}",
+    ))
+    return rows

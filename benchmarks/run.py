@@ -7,6 +7,7 @@ import traceback
 
 from . import (
     ablations,
+    engine_chunking,
     fig1_scaling,
     kernel_micro,
     multidevice,
@@ -24,6 +25,7 @@ SUITES = {
     "multidevice": multidevice.run,    # §III-E   — multi-device + Amdahl
     "section5": section5_approx.run,   # §V       — exact vs DOULION
     "kernels": kernel_micro.run,       # Pallas kernel micro-sweeps
+    "chunking": engine_chunking.run,   # engine — memory-bounded partitioning
 }
 
 

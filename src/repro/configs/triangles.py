@@ -98,7 +98,12 @@ def build_dryrun(shape: str, mesh, variant: str = "baseline"):
             panel_args = args[: 2 * k]
             tail_src, tail_dst = args[2 * k : 2 * k + 2]
             csr = args[2 * k + 2 :]
-            return panel_fn(*panel_args, *csr) + search_fn(tail_src, tail_dst, *csr)
+            # search_fn emits per-segment partials (…, n_segments); collapse
+            # for the combined dry-run output (compile-shape only, never run
+            # on real data, so the int32 reduction here is fine)
+            return panel_fn(*panel_args, *csr) + search_fn(tail_src, tail_dst, *csr).sum(
+                axis=-1
+            )
 
         edge_args = tuple(
             sds((n_shards, per_width[w]), jnp.int32) for w in widths for _ in (0,)

@@ -2,13 +2,27 @@
 
 Public API::
 
-    from repro.core import count_triangles, transitivity, preprocess
+    from repro.core import TriangleCounter, count_triangles, transitivity
 
-    t = count_triangles(edge_array)                     # exact, on device
+    tc = TriangleCounter(method="auto", max_wedge_chunk=1 << 22)
+    t  = tc.count(edge_array)                           # memory-bounded, exact
+    t = count_triangles(edge_array)                     # one-shot facade
     t = count_triangles(edge_array, method="pallas")    # Pallas kernel path
-    t = count_triangles_distributed(edge_array, mesh)   # multi-pod
+    t = count_triangles_distributed(edge_array, mesh)   # multi-pod (§III-E)
+
+:class:`TriangleCounter` (:mod:`repro.core.engine`) unifies the four
+schedules — ``wedge_bsearch``, ``panel``, ``pallas``, ``distributed`` —
+behind one API with memory-bounded edge partitioning; the per-schedule
+primitives live in :mod:`repro.core.count` / :mod:`repro.core.distributed`.
 """
 from .preprocess import OrientedCSR, preprocess, preprocess_host_offload, degrees
+from .engine import (
+    TriangleCounter,
+    EngineStats,
+    choose_method,
+    plan_edge_chunks,
+    accumulate_partials,
+)
 from .count import (
     WedgePlan,
     make_wedge_plan,
@@ -34,11 +48,18 @@ from .baseline import (
 from .approx import count_triangles_doulion
 from .distributed import (
     stripe_edges,
+    plan_striped_chunks,
     make_distributed_count_fn,
     count_triangles_distributed,
+    count_triangles_distributed_csr,
 )
 
 __all__ = [
+    "TriangleCounter",
+    "EngineStats",
+    "choose_method",
+    "plan_edge_chunks",
+    "accumulate_partials",
     "OrientedCSR",
     "preprocess",
     "preprocess_host_offload",
@@ -61,6 +82,8 @@ __all__ = [
     "count_triangles_bruteforce",
     "count_triangles_doulion",
     "stripe_edges",
+    "plan_striped_chunks",
     "make_distributed_count_fn",
     "count_triangles_distributed",
+    "count_triangles_distributed_csr",
 ]

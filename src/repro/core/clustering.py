@@ -11,11 +11,29 @@ from .count import make_wedge_plan, per_node_triangles
 from .preprocess import preprocess
 
 __all__ = [
+    "clustering_from_counts",
+    "transitivity_from_counts",
     "local_clustering_coefficient",
     "average_clustering_coefficient",
     "transitivity",
     "node_triangle_features",
 ]
+
+
+def clustering_from_counts(tri: np.ndarray, deg: np.ndarray) -> np.ndarray:
+    """c(v) = 2·T(v) / (deg(v)·(deg(v)−1)) from host count/degree arrays.
+
+    Shared formula for this module and the engine
+    (:meth:`repro.core.engine.TriangleCounter.clustering`).
+    """
+    pairs = deg * (deg - 1)
+    return np.where(pairs > 0, 2.0 * tri / np.maximum(pairs, 1), 0.0)
+
+
+def transitivity_from_counts(n_triangles: int, deg: np.ndarray) -> float:
+    """3·#triangles / #wedges from a host count and degree array."""
+    wedges = int((deg.astype(np.int64) * (deg.astype(np.int64) - 1) // 2).sum())
+    return 3.0 * n_triangles / wedges if wedges else 0.0
 
 
 def _csr(edges, n_nodes=None):
@@ -42,10 +60,8 @@ def transitivity(edges, n_nodes: int | None = None) -> float:
     """3·#triangles / #wedges (the transitivity ratio)."""
     csr = _csr(edges, n_nodes)
     tri = per_node_triangles(csr, make_wedge_plan(csr))
-    deg = np.asarray(csr.degree, dtype=np.int64)
-    wedges = int((deg * (deg - 1) // 2).sum())
     n_tri = int(np.asarray(tri, dtype=np.int64).sum()) // 3
-    return 3.0 * n_tri / wedges if wedges else 0.0
+    return transitivity_from_counts(n_tri, np.asarray(csr.degree))
 
 
 def node_triangle_features(edges, n_nodes: int | None = None) -> jax.Array:

@@ -21,6 +21,13 @@ we provide two TPU-native *exact* schedules:
 
 Both count each triangle exactly once (forward orientation guarantees a
 unique apex with two out-edges).
+
+This module holds the *primitives* (wedge expansion, batched binary
+search, bucketing, panel gathers).  Orchestration — schedule selection,
+memory-bounded edge chunking, uint64 host accumulation, the distributed
+composition — lives in :mod:`repro.core.engine`; ``count_triangles``
+below is a thin facade over :class:`repro.core.engine.TriangleCounter`.
+Measured schedule trade-offs are tabulated in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
@@ -37,6 +44,8 @@ from .preprocess import OrientedCSR, preprocess
 __all__ = [
     "WedgePlan",
     "make_wedge_plan",
+    "expand_and_close_wedges",
+    "segmented_int32_sum",
     "count_wedges_found",
     "count_triangles_csr",
     "count_triangles",
@@ -96,6 +105,50 @@ def _batched_contains(
     return (lo < end) & (col[safe] == target)
 
 
+def expand_and_close_wedges(src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps):
+    """Expand a (possibly −1-padded) directed-edge array into wedges and
+    close them with the batched binary search.
+
+    The single shared implementation of the wedge schedule's inner body —
+    used unchunked here (:func:`count_wedges_found`) and per budget-sized
+    chunk by :mod:`repro.core.engine`.  Returns ``(hit, u, v, w)`` where
+    ``hit[i]`` marks wedge slot ``i`` as a closed, non-padding triangle.
+    ``wedge_budget`` (static) is the buffer length; padding slots and −1
+    edge slots contribute ``hit = False``.
+    """
+    m_local = src_e.shape[0]
+    valid_e = src_e >= 0
+    safe_src = jnp.maximum(src_e, 0)
+    safe_dst = jnp.maximum(dst_e, 0)
+    reps = jnp.where(valid_e, out_deg[safe_src], 0)
+    starts = jnp.cumsum(reps) - reps
+    edge_id = jnp.repeat(
+        jnp.arange(m_local, dtype=jnp.int32), reps, total_repeat_length=wedge_budget
+    )
+    pos = jnp.arange(wedge_budget, dtype=jnp.int32) - starts[edge_id]
+    valid = (pos >= 0) & (pos < reps[edge_id])
+    u = safe_src[edge_id]
+    v = safe_dst[edge_id]
+    w_idx = jnp.clip(row_offsets[u] + pos, 0, col.shape[0] - 1)
+    w = col[w_idx]
+    found = _batched_contains(col, row_offsets[v], row_offsets[v + 1], w, n_steps)
+    return found & valid, u, v, w
+
+
+def segmented_int32_sum(hits: jax.Array, seg: int = 1 << 20) -> jax.Array:
+    """Reduce a boolean hit buffer to per-``seg``-slot int32 partials.
+
+    A segment sum never exceeds ``seg`` (default 2²⁰), so int32 stays safe
+    even when the whole buffer holds ≥ 2³¹ hits; the final reduction runs
+    on host in uint64 (:func:`repro.core.engine.accumulate_partials`).
+    Shared by the unchunked, chunked, and distributed counting paths.
+    """
+    n = hits.shape[0]
+    pad = (-n) % seg
+    padded = jnp.concatenate([hits, jnp.zeros((pad,), hits.dtype)]) if pad else hits
+    return jnp.sum(padded.reshape(-1, seg).astype(jnp.int32), axis=1, dtype=jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("plan",))
 def count_wedges_found(csr: OrientedCSR, plan: WedgePlan) -> tuple[jax.Array, jax.Array]:
     """Return (found mask over the wedge buffer, wedge endpoints (u,v,w)).
@@ -104,22 +157,10 @@ def count_wedges_found(csr: OrientedCSR, plan: WedgePlan) -> tuple[jax.Array, ja
     candidate ``w ∈ N⁺(u)``; ``found[i]`` says wedge ``i`` closes into a
     triangle.  Padding slots are masked off.
     """
-    m_dir = csr.col.shape[0]
-    reps = csr.out_degree[csr.src]                      # wedges per edge
-    starts = jnp.cumsum(reps) - reps
-    edge_id = jnp.repeat(
-        jnp.arange(m_dir, dtype=jnp.int32), reps, total_repeat_length=plan.total_wedges
+    found, u, v, w = expand_and_close_wedges(
+        csr.src, csr.col, csr.row_offsets, csr.col, csr.out_degree,
+        plan.total_wedges, plan.n_search_steps,
     )
-    pos = jnp.arange(plan.total_wedges, dtype=jnp.int32) - starts[edge_id]
-    valid = (pos >= 0) & (pos < reps[edge_id])
-    u = csr.src[edge_id]
-    v = csr.col[edge_id]
-    w_idx = jnp.clip(csr.row_offsets[u] + pos, 0, m_dir - 1)
-    w = csr.col[w_idx]
-    found = _batched_contains(
-        csr.col, csr.row_offsets[v], csr.row_offsets[v + 1], w, plan.n_search_steps
-    )
-    found = found & valid
     return found, (u, v, w)
 
 
@@ -128,16 +169,10 @@ def count_triangles_csr(csr: OrientedCSR, plan: WedgePlan | None = None) -> int:
     if plan is None:
         plan = make_wedge_plan(csr)
     found, _ = count_wedges_found(csr, plan)
-    # Partial sums stay in int32 (< 2^31 per 2^20-chunk); the final
-    # accumulation happens on host in uint64, so counts like the paper's
-    # 8.8e9 (Kronecker-21) do not overflow 32-bit device arithmetic.
-    chunk = 1 << 20
-    n = found.shape[0]
-    pad = (-n) % chunk
-    padded = jnp.concatenate([found, jnp.zeros((pad,), found.dtype)]) if pad else found
-    partials = jnp.sum(
-        padded.reshape(-1, chunk).astype(jnp.int32), axis=1, dtype=jnp.int32
-    )
+    # Per-2^20-segment int32 partials; the final accumulation happens on
+    # host in uint64, so counts like the paper's 8.8e9 (Kronecker-21) do
+    # not overflow 32-bit device arithmetic.
+    partials = segmented_int32_sum(found)
     return int(np.asarray(partials).astype(np.uint64).sum())
 
 
@@ -197,9 +232,15 @@ def gather_panels(csr: OrientedCSR, edge_idx: jax.Array, width: int):
     of each edge's ``u`` (−1 padded) and ``b`` likewise for ``v``.  The
     gathers run as XLA ops *outside* the kernel — the TPU replacement for
     the paper's reliance on the GPU texture cache inside the merge loop.
+
+    ``edge_idx`` slots holding −1 (budget-chunk padding from the engine)
+    yield all-(−1) panel rows with zero lengths, which every intersect
+    kernel counts as zero.
     """
-    u = csr.src[edge_idx]
-    v = csr.col[edge_idx]
+    valid = edge_idx >= 0
+    safe = jnp.maximum(edge_idx, 0)
+    u = csr.src[safe]
+    v = csr.col[safe]
     lane = jnp.arange(width, dtype=jnp.int32)
     m_dir = csr.col.shape[0]
 
@@ -208,8 +249,8 @@ def gather_panels(csr: OrientedCSR, edge_idx: jax.Array, width: int):
         vals = csr.col[idx]
         return jnp.where(lane[None, :] < length[:, None], vals, -1)
 
-    a_len = csr.out_degree[u]
-    b_len = csr.out_degree[v]
+    a_len = jnp.where(valid, csr.out_degree[u], 0)
+    b_len = jnp.where(valid, csr.out_degree[v], 0)
     a = panel(csr.row_offsets[u], a_len)
     b = panel(csr.row_offsets[v], b_len)
     return a, b, a_len, b_len
@@ -229,7 +270,12 @@ def panel_intersect_count(a: jax.Array, b: jax.Array) -> jax.Array:
 
 
 def _count_panel(csr: OrientedCSR, kernel=None) -> int:
-    """Bucketed panel counting; `kernel` overrides the per-bucket intersect."""
+    """Bucketed panel counting; `kernel` overrides the per-bucket intersect.
+
+    Retained for direct-CSR callers; the chunked production path lives in
+    :class:`repro.core.engine.TriangleCounter`, which wraps this same
+    bucket loop under a wedge-buffer budget.
+    """
     intersect = kernel or (lambda a, b, al, bl: panel_intersect_count(a, b))
     total = np.uint64(0)
     for width, idx in bucketize_edges(csr).items():
@@ -240,29 +286,25 @@ def _count_panel(csr: OrientedCSR, kernel=None) -> int:
 
 
 # ---------------------------------------------------------------------------
-# public entry point
+# public entry point (thin facade over the unified engine)
 # ---------------------------------------------------------------------------
 
 
 def count_triangles(
-    edges, n_nodes: int | None = None, method: str = "wedge_bsearch"
+    edges,
+    n_nodes: int | None = None,
+    method: str = "wedge_bsearch",
+    max_wedge_chunk: int | None = None,
 ) -> int:
     """Count triangles in a canonical edge array.
 
-    ``method`` ∈ {"wedge_bsearch", "panel", "pallas"}.
+    ``method`` ∈ {"auto", "wedge_bsearch", "panel", "pallas"}.  Routes
+    through :class:`repro.core.engine.TriangleCounter`; pass
+    ``max_wedge_chunk`` to bound the device wedge buffer (memory-bounded
+    edge partitioning — see the engine docstring).
     """
-    edges = np.asarray(edges)
-    if edges.size == 0:
-        return 0
-    if n_nodes is None:
-        n_nodes = int(edges.max()) + 1
-    csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
-    if method == "wedge_bsearch":
-        return count_triangles_csr(csr)
-    if method == "panel":
-        return _count_panel(csr)
-    if method == "pallas":
-        from repro.kernels.triangle_count import ops as tc_ops
+    from .engine import TriangleCounter  # late import: engine uses this module
 
-        return _count_panel(csr, kernel=tc_ops.intersect_count)
-    raise ValueError(f"unknown method {method!r}")
+    return TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk).count(
+        edges, n_nodes=n_nodes
+    )

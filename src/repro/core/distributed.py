@@ -27,17 +27,22 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+try:  # jax ≥ 0.6 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # jax 0.4.x keeps it under jax.experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .count import _batched_contains
+from .count import _batched_contains, segmented_int32_sum
 from .preprocess import OrientedCSR, preprocess
 
 __all__ = [
     "stripe_edges",
+    "plan_striped_chunks",
     "make_distributed_count_fn",
     "make_distributed_panel_count_fn",
     "count_triangles_distributed",
+    "count_triangles_distributed_csr",
     "count_triangles_distributed_panel",
 ]
 
@@ -71,6 +76,53 @@ def stripe_edges(csr: OrientedCSR, n_shards: int, shorter_side: bool = False):
     return src_sh, dst_sh, int(w_per_shard.max()) if m else 1
 
 
+def plan_striped_chunks(
+    src_sh: np.ndarray,
+    out_deg: np.ndarray,
+    budget: int | None,
+    dst_sh: np.ndarray | None = None,
+):
+    """Partition the striped per-shard edge axis under a wedge budget.
+
+    ``src_sh`` is the ``(n_shards, e_per)`` striped source array from
+    :func:`stripe_edges` (−1 padded).  Returns ``(bounds, eff)`` where
+    each column slice ``[start, end)`` in ``bounds`` keeps *every*
+    shard's wedge-buffer requirement ≤ ``eff``, and
+    ``eff = max(budget, max single-edge fan-out)`` (a chunk must hold at
+    least one whole edge per shard).  With ``budget=None`` the whole axis
+    is one chunk sized to the worst shard — the unchunked behavior.
+
+    Pass ``dst_sh`` for the shorter-side variant: fan-outs are then
+    ``min(deg⁺(u), deg⁺(v))``, matching what the kernel enumerates, so
+    the budget is not over-reserved from the src side alone.
+    """
+    out_deg = np.asarray(out_deg)
+    reps = np.where(src_sh >= 0, out_deg[np.maximum(src_sh, 0)], 0).astype(np.int64)
+    if dst_sh is not None:
+        reps_v = np.where(dst_sh >= 0, out_deg[np.maximum(dst_sh, 0)], 0).astype(np.int64)
+        reps = np.minimum(reps, reps_v)
+    e_per = src_sh.shape[1]
+    per_shard_total = reps.sum(axis=1)
+    if e_per == 0:
+        return [(0, 0)], 1
+    if budget is None or budget >= int(per_shard_total.max()):
+        return [(0, e_per)], max(int(per_shard_total.max()), 1)
+    eff = max(int(budget), int(reps.max()), 1)
+    cum = np.cumsum(reps, axis=1)  # (S, e_per) per-shard running wedge load
+    bounds = []
+    start = 0
+    while start < e_per:
+        base = cum[:, start - 1] if start else np.zeros(cum.shape[0], np.int64)
+        # furthest end each shard tolerates; the chunk ends at the minimum
+        ends = np.array(
+            [np.searchsorted(cum[s], base[s] + eff, side="right") for s in range(cum.shape[0])]
+        )
+        end = max(int(ends.min()), start + 1)
+        bounds.append((start, end))
+        start = end
+    return bounds, eff
+
+
 def make_distributed_count_fn(
     mesh: Mesh,
     wedge_budget: int,
@@ -84,7 +136,10 @@ def make_distributed_count_fn(
     by :func:`stripe_edges`; ``n_search_steps`` bounds the binary search.
     Edge shards live on the product of every mesh axis; the CSR is
     replicated.  Returns ``f(src_sh, dst_sh, row_offsets, col, out_degree)
-    -> per-shard partial counts (n_shards,) int32``.
+    -> per-shard partial counts, (n_shards, n_segments) int32`` where each
+    partial covers one 2²⁰-slot segment of the shard's wedge buffer — a
+    segment sum never exceeds 2²⁰, so int32 stays safe even when a shard
+    closes ≥ 2³¹ wedges in one launch; callers reduce in uint64 on host.
 
     ``shorter_side`` (§Perf): enumerate wedge candidates from the *smaller*
     of N⁺(u), N⁺(v) and binary-search the larger — |N⁺(u) ∩ N⁺(v)| is
@@ -126,8 +181,8 @@ def make_distributed_count_fn(
         found = _batched_contains(
             col, row_offsets[v], row_offsets[v + 1], w, n_search_steps
         )
-        partial = jnp.sum(found & valid, dtype=jnp.int32)
-        return partial.reshape((1,) * len(axes))
+        partial = segmented_int32_sum(found & valid)
+        return partial.reshape((1,) * len(axes) + (-1,))
 
     edge_spec = P(axes)  # edge-shard dim split over the flattened mesh
     rep = P()
@@ -135,7 +190,7 @@ def make_distributed_count_fn(
         shard_body,
         mesh=mesh,
         in_specs=(edge_spec, edge_spec, rep, rep, rep),
-        out_specs=P(*axes),
+        out_specs=P(*axes, None),
     )
     return jax.jit(f)
 
@@ -193,8 +248,69 @@ def make_distributed_panel_count_fn(
     return jax.jit(f), widths
 
 
+def count_triangles_distributed_csr(
+    csr: OrientedCSR,
+    mesh: Mesh,
+    shorter_side: bool = False,
+    max_wedge_chunk: int | None = None,
+    stats_out: dict | None = None,
+) -> int:
+    """Sharded count from a prebuilt CSR (stripe → chunk → sharded count).
+
+    ``max_wedge_chunk`` bounds every shard's wedge buffer: the striped
+    edge axis is sliced into column chunks (:func:`plan_striped_chunks`),
+    each padded to a fixed width so one jitted ``shard_map`` kernel is
+    reused across chunks.  This is the engine's memory-bounded
+    partitioning composed with the paper's §III-E striping.  Partial
+    counts accumulate on host in uint64.
+    """
+    n_shards = int(np.prod(mesh.devices.shape))
+    src_sh, dst_sh, _ = stripe_edges(csr, n_shards, shorter_side=shorter_side)
+    max_deg = int(np.asarray(csr.out_degree).max()) if csr.n_nodes else 0
+    steps = max(1, int(np.ceil(np.log2(max_deg + 1)))) if max_deg else 1
+    bounds, eff = plan_striped_chunks(
+        src_sh,
+        np.asarray(csr.out_degree),
+        max_wedge_chunk,
+        dst_sh=dst_sh if shorter_side else None,
+    )
+    cols_per_chunk = max(end - start for start, end in bounds)
+    count_fn = make_distributed_count_fn(mesh, eff, steps, shorter_side=shorter_side)
+    rep_sharding = NamedSharding(mesh, P())
+    edge_sharding = NamedSharding(mesh, P(mesh.axis_names))
+    csr_dev = (
+        jax.device_put(np.asarray(csr.row_offsets), rep_sharding),
+        jax.device_put(np.asarray(csr.col), rep_sharding),
+        jax.device_put(np.asarray(csr.out_degree), rep_sharding),
+    )
+    total = np.uint64(0)
+    for start, end in bounds:
+        pad = cols_per_chunk - (end - start)
+        s = src_sh[:, start:end]
+        d = dst_sh[:, start:end]
+        if pad:
+            fill = np.full((n_shards, pad), -1, np.int32)
+            s = np.concatenate([s, fill], axis=1)
+            d = np.concatenate([d, fill], axis=1)
+        partials = count_fn(
+            jax.device_put(np.ascontiguousarray(s), edge_sharding),
+            jax.device_put(np.ascontiguousarray(d), edge_sharding),
+            *csr_dev,
+        )
+        total += np.uint64(np.asarray(partials).astype(np.uint64).sum())
+    if stats_out is not None:
+        stats_out["n_chunks"] = len(bounds)
+        stats_out["peak_wedge_buffer"] = eff
+        stats_out["cols_per_chunk"] = cols_per_chunk
+    return int(total)
+
+
 def count_triangles_distributed(
-    edges, mesh: Mesh, n_nodes: int | None = None, shorter_side: bool = False
+    edges,
+    mesh: Mesh,
+    n_nodes: int | None = None,
+    shorter_side: bool = False,
+    max_wedge_chunk: int | None = None,
 ) -> int:
     """End-to-end distributed count (preprocess → stripe → sharded count)."""
     edges = np.asarray(edges)
@@ -203,22 +319,9 @@ def count_triangles_distributed(
     if n_nodes is None:
         n_nodes = int(edges.max()) + 1
     csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
-    n_shards = int(np.prod(mesh.devices.shape))
-    src_sh, dst_sh, w_max = stripe_edges(csr, n_shards, shorter_side=shorter_side)
-    max_deg = int(np.asarray(csr.out_degree).max()) if n_nodes else 0
-    steps = max(1, int(np.ceil(np.log2(max_deg + 1)))) if max_deg else 1
-    count_fn = make_distributed_count_fn(
-        mesh, max(w_max, 1), steps, shorter_side=shorter_side
+    return count_triangles_distributed_csr(
+        csr, mesh, shorter_side=shorter_side, max_wedge_chunk=max_wedge_chunk
     )
-    rep_sharding = NamedSharding(mesh, P())
-    partials = count_fn(
-        jax.device_put(src_sh, NamedSharding(mesh, P(mesh.axis_names))),
-        jax.device_put(dst_sh, NamedSharding(mesh, P(mesh.axis_names))),
-        jax.device_put(np.asarray(csr.row_offsets), rep_sharding),
-        jax.device_put(np.asarray(csr.col), rep_sharding),
-        jax.device_put(np.asarray(csr.out_degree), rep_sharding),
-    )
-    return int(np.asarray(partials).astype(np.uint64).sum())
 
 
 def count_triangles_distributed_panel(

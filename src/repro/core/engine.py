@@ -1,0 +1,500 @@
+"""Unified triangle-counting engine with memory-bounded edge partitioning.
+
+:class:`TriangleCounter` puts the four counting schedules that used to be
+siloed across :mod:`repro.core.count` and :mod:`repro.core.distributed`
+behind one front door::
+
+    from repro.core import TriangleCounter
+
+    tc = TriangleCounter(method="auto", max_wedge_chunk=1 << 22)
+    t  = tc.count(edges)          # exact global count (host int, uint64-safe)
+    pn = tc.per_node(edges)       # per-vertex triangle incidences
+    cc = tc.clustering(edges)     # local clustering coefficients
+
+The headline capability is **memory-bounded edge partitioning** — the
+reproduction of the paper's "larger than device memory" discipline.  The
+paper (§III-C) assigns one CUDA thread per directed edge; the device-side
+working set of our TPU rendition is instead the *wedge buffer* of
+``Σ deg⁺(u)`` candidate slots, which for an 89M-edge Kronecker graph is
+billions of slots — far beyond HBM if materialized at once.  The engine
+splits the directed edge list into contiguous chunks whose wedge buffers
+fit a static budget, pads every chunk to that budget, and reuses **one**
+jitted kernel across all chunks, so the number of *compiles* is constant
+while the number of *launches* scales with graph size.  Partial counts
+leave the device as int32 and are accumulated on host in uint64
+(:func:`accumulate_partials`), so counts like the paper's 3.8B triangles
+never overflow 32-bit device arithmetic.
+
+Knob → paper-section map
+========================
+
+``method``
+    ``"wedge_bsearch"`` / ``"panel"`` / ``"pallas"`` are the TPU-native
+    renditions of the paper's ``CountTriangles`` kernel (§II-C forward
+    algorithm, §III-C counting phase); ``"distributed"`` is the multi-GPU
+    scheme of §III-E (replicated CSR, striped edge list, reduced
+    partials); ``"auto"`` picks from graph stats (:func:`choose_method`).
+``max_wedge_chunk``
+    The per-launch wedge-buffer budget, in candidate slots.  This is the
+    engine's analogue of the paper's per-GPU memory ceiling that forces
+    the edge list to be processed in passes (§III-E, Table I's 89M-edge
+    graph on a 3 GB C2050).  ``None`` materializes one full-size buffer
+    (single chunk).  A budget smaller than one edge's fan-out is bumped
+    to the max fan-out — a chunk must hold at least one whole edge.
+``widths``
+    Panel bucket boundaries for the ``panel``/``pallas`` schedules — the
+    TPU analogue of the paper's warp-size tuning (§III-D5).  Wedge chunking
+    wraps the bucket loop: each bucket is processed in slices of
+    ``max_wedge_chunk // width`` edges so panel gathers respect the same
+    budget.
+``mesh``
+    A ``jax.sharding.Mesh`` enabling the §III-E multi-device scheme; the
+    edge chunking composes with the round-robin striping in
+    :mod:`repro.core.distributed` (chunks slice the striped per-shard
+    edge axis, so every device's buffer stays within budget).
+``block_edges``
+    (Pallas kernel tile height, chosen inside
+    :mod:`repro.kernels.triangle_count`) — the §III-D5 thread-block
+    sizing; see EXPERIMENTS.md §Perf for the sweep.
+
+Scheduling heuristics (``method="auto"``) follow §III-C's skew
+discussion: low max out-degree and low skew favor the panel equality
+reduction, heavy tails favor the binary-search schedule, and a multi-chip
+mesh always routes to the distributed striping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .count import (
+    bucketize_edges,
+    expand_and_close_wedges,
+    gather_panels,
+    panel_intersect_count,
+    segmented_int32_sum,
+)
+from .preprocess import OrientedCSR, preprocess
+
+__all__ = [
+    "TriangleCounter",
+    "EngineStats",
+    "choose_method",
+    "plan_edge_chunks",
+    "accumulate_partials",
+    "METHODS",
+]
+
+METHODS = ("auto", "wedge_bsearch", "panel", "pallas", "distributed")
+
+DEFAULT_WIDTHS = (16, 64, 256, 1024, 4096)
+
+
+# ---------------------------------------------------------------------------
+# host-side planning + accumulation
+# ---------------------------------------------------------------------------
+
+
+def accumulate_partials(partials) -> int:
+    """uint64 host accumulation of device partial counts.
+
+    Device partials are int32 scalars or vectors, each element bounded by
+    its reduction segment (2²⁰ slots in the chunk kernels); the *sum*
+    over partials can exceed 2³¹ — the paper's Table I counts reach
+    3.8B — so the running total lives in uint64 on host.
+    """
+    total = np.uint64(0)
+    for p in partials:
+        arr = np.asarray(p)
+        if arr.size == 0:
+            continue
+        total += np.uint64(arr.astype(np.uint64).sum())
+    return int(total)
+
+
+def plan_edge_chunks(reps: np.ndarray, budget: int | None):
+    """Greedy contiguous partition of the directed edge list.
+
+    ``reps[i]`` is the wedge fan-out of directed edge ``i``.  Returns
+    ``(bounds, effective_budget)`` where every ``[start, end)`` chunk in
+    ``bounds`` satisfies ``reps[start:end].sum() <= effective_budget``.
+    The effective budget is ``max(budget, reps.max())`` — a chunk must
+    hold at least one whole edge's fan-out, so a sub-fan-out budget is
+    bumped rather than splitting an adjacency list.
+    """
+    reps = np.asarray(reps, dtype=np.int64)
+    m = reps.shape[0]
+    if m == 0:
+        return [(0, 0)], 1
+    total = int(reps.sum())
+    max_fan = int(reps.max())
+    if budget is None or budget >= total:
+        return [(0, m)], max(total, 1)
+    eff = max(int(budget), max_fan, 1)
+    cum = np.cumsum(reps)
+    bounds = []
+    start = 0
+    while start < m:
+        base = int(cum[start - 1]) if start else 0
+        end = int(np.searchsorted(cum, base + eff, side="right"))
+        end = max(end, start + 1)
+        bounds.append((start, end))
+        start = end
+    return bounds, eff
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """What the last engine call actually did (for tests and tuning)."""
+
+    method: str                  # resolved schedule, never "auto"
+    n_chunks: int                # device launches for the counting phase
+    peak_wedge_buffer: int       # largest buffer materialized per launch
+    wedge_budget: int | None     # requested budget (None = unbounded)
+    total_wedges: int            # Σ fan-out over all directed edges
+    n_directed_edges: int
+
+
+# ---------------------------------------------------------------------------
+# chunk kernels (compiled once per (shape-budget, steps) pair, reused
+# across every chunk — chunk count drives launches, not compiles)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
+def _chunk_count_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
+    """Count triangles closed by one −1-padded edge chunk.
+
+    Returns a *vector* of int32 partials, one per 2²⁰-slot segment of the
+    wedge buffer (:func:`repro.core.count.segmented_int32_sum`): int32 is
+    safe even for an unbounded (``max_wedge_chunk=None``) launch whose
+    total hits exceed 2³¹ — the final uint64 reduction happens on host.
+    """
+    hit, _, _, _ = expand_and_close_wedges(
+        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+    )
+    return segmented_int32_sum(hit)
+
+
+@functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
+def _chunk_per_node_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
+    """Per-vertex triangle incidences contributed by one edge chunk."""
+    hit, u, v, w = expand_and_close_wedges(
+        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+    )
+    inc = hit.astype(jnp.int32)
+    n = row_offsets.shape[0] - 1
+    out = jnp.zeros((n,), jnp.int32)
+    out = out.at[u].add(inc)
+    out = out.at[v].add(inc)
+    out = out.at[w].add(inc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# auto dispatch
+# ---------------------------------------------------------------------------
+
+
+def choose_method(
+    *,
+    max_out_degree: int,
+    mean_out_degree: float,
+    mesh=None,
+    widths: tuple[int, ...] = DEFAULT_WIDTHS,
+    backend: str | None = None,
+) -> str:
+    """Pick a counting schedule from graph statistics (§III-C skew logic).
+
+    * a multi-device mesh always wins — the §III-E striping scales and is
+      exact regardless of skew;
+    * on TPU, panels that fit the largest bucket go to the Pallas kernel
+      (equality tiles saturate the VPU; the texture-cache role is played
+      by explicit VMEM staging);
+    * low degree + low skew favors the jnp panel schedule (padding waste
+      bounded, O(L²) constant small);
+    * heavy tails — Kronecker-style skew — favor ``wedge_bsearch``, whose
+      log-factor cost is immune to padding waste.
+    """
+    if mesh is not None and int(np.prod(mesh.devices.shape)) > 1:
+        return "distributed"
+    backend = backend or jax.default_backend()
+    skew = max_out_degree / max(mean_out_degree, 1e-9)
+    if backend == "tpu" and max_out_degree <= widths[-1]:
+        return "pallas"
+    if max_out_degree <= 64 and skew <= 16.0:
+        return "panel"
+    return "wedge_bsearch"
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class TriangleCounter:
+    """Unified, memory-bounded triangle counting over every schedule.
+
+    Parameters
+    ----------
+    method:
+        One of ``"auto"``, ``"wedge_bsearch"``, ``"panel"``, ``"pallas"``,
+        ``"distributed"``.
+    max_wedge_chunk:
+        Wedge-buffer budget per device launch (slots).  ``None`` runs a
+        single full-size launch.
+    widths:
+        Panel bucket boundaries for the panel/Pallas schedules.
+    mesh:
+        ``jax.sharding.Mesh`` for the distributed schedule (required when
+        ``method="distributed"``; enables it under ``"auto"``).
+    shorter_side:
+        Distributed only — enumerate wedge candidates from the smaller
+        endpoint list (§Perf "opt" variant in EXPERIMENTS.md).
+
+    After any call, :attr:`last_stats` holds an :class:`EngineStats`
+    describing what ran (resolved method, chunk count, peak buffer).
+    """
+
+    def __init__(
+        self,
+        method: str = "auto",
+        max_wedge_chunk: int | None = None,
+        widths: tuple[int, ...] = DEFAULT_WIDTHS,
+        mesh=None,
+        shorter_side: bool = False,
+    ):
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+        if method == "distributed" and mesh is None:
+            raise ValueError("method='distributed' requires a mesh")
+        if max_wedge_chunk is not None and max_wedge_chunk < 1:
+            raise ValueError("max_wedge_chunk must be positive")
+        self.method = method
+        self.max_wedge_chunk = max_wedge_chunk
+        self.widths = tuple(widths)
+        self.mesh = mesh
+        self.shorter_side = shorter_side
+        self.last_stats: EngineStats | None = None
+
+    # -- public API ---------------------------------------------------------
+
+    def count(self, edges, n_nodes: int | None = None) -> int:
+        """Exact global triangle count of a canonical edge array."""
+        csr = self._prepare(edges, n_nodes)
+        if csr is None:
+            return 0
+        method = self._resolve(csr)
+        if method == "wedge_bsearch":
+            return self._count_wedge(csr)
+        if method in ("panel", "pallas"):
+            return self._count_panel(csr, pallas=(method == "pallas"))
+        if method == "distributed":
+            return self._count_distributed(csr)
+        raise AssertionError(method)
+
+    def per_node(self, edges, n_nodes: int | None = None) -> np.ndarray:
+        """Per-vertex triangle incidences, int64 host array.
+
+        Always runs the (chunked) wedge schedule — the panel and
+        distributed schedules produce global partials only; per-node
+        scatter is the wedge kernel's native output.
+        """
+        csr = self._prepare(edges, n_nodes)
+        if csr is None:
+            n = n_nodes or 0
+            return np.zeros((n,), np.int64)
+        return self._per_node_wedge(csr)
+
+    def clustering(self, edges, n_nodes: int | None = None) -> np.ndarray:
+        """Local clustering coefficients c(v) = 2·T(v) / (deg(v)·(deg(v)−1))."""
+        from .clustering import clustering_from_counts
+
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            return np.zeros((n_nodes or 0,), np.float64)
+        if n_nodes is None:
+            n_nodes = int(edges.max()) + 1
+        tri = self.per_node(edges, n_nodes)
+        deg = np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64)
+        return clustering_from_counts(tri, deg)
+
+    def transitivity(self, edges, n_nodes: int | None = None) -> float:
+        """Global transitivity ratio 3·#triangles / #wedges."""
+        from .clustering import transitivity_from_counts
+
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            return 0.0
+        if n_nodes is None:
+            n_nodes = int(edges.max()) + 1
+        t = self.count(edges, n_nodes)
+        deg = np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64)
+        return transitivity_from_counts(t, deg)
+
+    # -- shared plumbing ----------------------------------------------------
+
+    def _prepare(self, edges, n_nodes: int | None) -> OrientedCSR | None:
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            # no CSR to resolve "auto" against; record the trivial schedule
+            resolved = self.method if self.method != "auto" else "wedge_bsearch"
+            self.last_stats = EngineStats(
+                method=resolved, n_chunks=0, peak_wedge_buffer=0,
+                wedge_budget=self.max_wedge_chunk, total_wedges=0,
+                n_directed_edges=0,
+            )
+            return None
+        if n_nodes is None:
+            n_nodes = int(edges.max()) + 1
+        return preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+
+    def _resolve(self, csr: OrientedCSR) -> str:
+        if self.method != "auto":
+            return self.method
+        out_deg = np.asarray(csr.out_degree)
+        max_deg = int(out_deg.max()) if out_deg.size else 0
+        mean_deg = float(out_deg.mean()) if out_deg.size else 0.0
+        return choose_method(
+            max_out_degree=max_deg,
+            mean_out_degree=mean_deg,
+            mesh=self.mesh,
+            widths=self.widths,
+        )
+
+    @staticmethod
+    def _search_steps(csr: OrientedCSR) -> int:
+        max_deg = int(np.asarray(csr.out_degree).max()) if csr.n_nodes else 0
+        return max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
+
+    def _wedge_chunks(self, csr: OrientedCSR):
+        """Lazily yield −1-padded fixed-shape (src, dst) chunks.
+
+        Returns ``(generator, n_chunks, eff, total_wedges)``; only one
+        padded chunk copy is resident at a time, so host overhead stays
+        O(chunk) in the larger-than-memory regime the budget targets.
+        """
+        src = np.asarray(csr.src)
+        out_deg = np.asarray(csr.out_degree)
+        reps = out_deg[src].astype(np.int64)
+        bounds, eff = plan_edge_chunks(reps, self.max_wedge_chunk)
+        edges_per_chunk = max(end - start for start, end in bounds)
+
+        def gen():
+            if len(bounds) == 1:
+                # single full chunk: feed the device-resident CSR arrays
+                # directly — no host round-trip, no copies
+                yield csr.src, csr.col
+                return
+            dst = np.asarray(csr.col)
+            for start, end in bounds:
+                pad = edges_per_chunk - (end - start)
+                s, d = src[start:end], dst[start:end]
+                if pad:
+                    fill = np.full(pad, -1, np.int32)
+                    s = np.concatenate([s, fill])
+                    d = np.concatenate([d, fill])
+                yield s.astype(np.int32, copy=False), d.astype(np.int32, copy=False)
+
+        return gen(), len(bounds), eff, int(reps.sum())
+
+    def _record(self, method, n_chunks, peak, total_wedges, m_dir):
+        self.last_stats = EngineStats(
+            method=method,
+            n_chunks=n_chunks,
+            peak_wedge_buffer=peak,
+            wedge_budget=self.max_wedge_chunk,
+            total_wedges=total_wedges,
+            n_directed_edges=m_dir,
+        )
+
+    # -- wedge_bsearch schedule ---------------------------------------------
+
+    def _count_wedge(self, csr: OrientedCSR) -> int:
+        chunks, n_chunks, eff, total = self._wedge_chunks(csr)
+        steps = self._search_steps(csr)
+        running = np.uint64(0)
+        for s, d in chunks:
+            partial = _chunk_count_kernel(
+                jnp.asarray(s), jnp.asarray(d),
+                csr.row_offsets, csr.col, csr.out_degree,
+                wedge_budget=eff, n_steps=steps,
+            )
+            running += np.uint64(accumulate_partials([partial]))
+        self._record("wedge_bsearch", n_chunks, eff, total, csr.n_directed_edges)
+        return int(running)
+
+    def _per_node_wedge(self, csr: OrientedCSR) -> np.ndarray:
+        chunks, n_chunks, eff, total = self._wedge_chunks(csr)
+        steps = self._search_steps(csr)
+        out = np.zeros((csr.n_nodes,), np.int64)
+        for s, d in chunks:
+            part = _chunk_per_node_kernel(
+                jnp.asarray(s), jnp.asarray(d),
+                csr.row_offsets, csr.col, csr.out_degree,
+                wedge_budget=eff, n_steps=steps,
+            )
+            out += np.asarray(part, dtype=np.int64)
+        self._record("wedge_bsearch", n_chunks, eff, total, csr.n_directed_edges)
+        return out
+
+    # -- panel / pallas schedules -------------------------------------------
+
+    def _count_panel(self, csr: OrientedCSR, *, pallas: bool) -> int:
+        if pallas:
+            from repro.kernels.triangle_count import ops as tc_ops
+
+            intersect = lambda a, b: tc_ops.intersect_count(a, b)
+        else:
+            intersect = panel_intersect_count
+        budget = self.max_wedge_chunk
+        buckets = bucketize_edges(csr, self.widths)
+        partials = []
+        n_chunks = 0
+        peak = 0
+        for width, idx in buckets.items():
+            per = len(idx) if budget is None else max(1, int(budget) // width)
+            n_slices = -(-len(idx) // per)
+            for s in range(0, len(idx), per):
+                sl = idx[s : s + per]
+                pad = per - len(sl) if n_slices > 1 else 0
+                padded = np.concatenate([sl, np.full(pad, -1, np.int32)]) if pad else sl
+                a, b, _, _ = gather_panels(
+                    csr, jnp.asarray(padded.astype(np.int32)), width
+                )
+                partials.append(intersect(a, b))
+                n_chunks += 1
+                peak = max(peak, a.shape[0] * width)
+        out_deg = np.asarray(csr.out_degree)
+        total = int(out_deg[np.asarray(csr.src)].astype(np.int64).sum())
+        self._record("pallas" if pallas else "panel", n_chunks, peak, total,
+                     csr.n_directed_edges)
+        return accumulate_partials(partials)
+
+    # -- distributed schedule -----------------------------------------------
+
+    def _count_distributed(self, csr: OrientedCSR) -> int:
+        from .distributed import count_triangles_distributed_csr
+
+        stats: dict = {}
+        total = count_triangles_distributed_csr(
+            csr, self.mesh,
+            shorter_side=self.shorter_side,
+            max_wedge_chunk=self.max_wedge_chunk,
+            stats_out=stats,
+        )
+        out_deg = np.asarray(csr.out_degree)
+        total_wedges = int(out_deg[np.asarray(csr.src)].astype(np.int64).sum())
+        self._record(
+            "distributed",
+            stats.get("n_chunks", 1),
+            stats.get("peak_wedge_buffer", 0),
+            total_wedges,
+            csr.n_directed_edges,
+        )
+        return total

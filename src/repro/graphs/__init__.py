@@ -5,6 +5,7 @@ from .formats import (
     csr_to_edge_array,
     undirected_edge_count,
     validate_edge_array,
+    graph_stats,
 )
 from .generators import (
     kronecker_rmat,
@@ -22,6 +23,7 @@ __all__ = [
     "csr_to_edge_array",
     "undirected_edge_count",
     "validate_edge_array",
+    "graph_stats",
     "kronecker_rmat",
     "barabasi_albert",
     "watts_strogatz",

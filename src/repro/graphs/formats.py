@@ -16,6 +16,7 @@ __all__ = [
     "csr_to_edge_array",
     "undirected_edge_count",
     "validate_edge_array",
+    "graph_stats",
 ]
 
 
@@ -82,3 +83,30 @@ def csr_to_edge_array(row_offsets: np.ndarray, col: np.ndarray) -> np.ndarray:
     n = row_offsets.shape[0] - 1
     src = np.repeat(np.arange(n, dtype=col.dtype), np.diff(row_offsets))
     return np.stack([src, col], axis=1)
+
+
+def graph_stats(edges: np.ndarray) -> dict:
+    """Host-side summary statistics of the *undirected* graph.
+
+    Returns ``n_nodes``, ``n_edges`` (undirected), ``max_degree``,
+    ``mean_degree``, ``skew`` (max/mean degree — the §III-C load-imbalance
+    proxy) and ``total_wedges`` (Σ deg·(deg−1)/2 — the transitivity
+    denominator).  Note these are undirected quantities; the engine's
+    budgeted workload is the smaller *oriented* Σ deg⁺, reported after a
+    run as ``TriangleCounter.last_stats.total_wedges``.
+    """
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return dict(n_nodes=0, n_edges=0, max_degree=0, mean_degree=0.0,
+                    skew=0.0, total_wedges=0)
+    n = int(edges.max()) + 1
+    deg = np.bincount(edges[:, 0], minlength=n).astype(np.int64)
+    mean = float(deg.mean())
+    return dict(
+        n_nodes=n,
+        n_edges=edges.shape[0] // 2,
+        max_degree=int(deg.max()),
+        mean_degree=mean,
+        skew=float(deg.max() / max(mean, 1e-9)),
+        total_wedges=int((deg * (deg - 1) // 2).sum()),
+    )

@@ -23,7 +23,11 @@ Design choices mirroring the paper's optimizations:
   swept in EXPERIMENTS.md §Perf exactly like the paper's grid search;
 * degree skew (the reason the paper picked *forward*) → callers bucket
   edges by panel width (`repro.core.count.bucketize_edges`), so padding
-  waste is bounded and each bucket compiles a tight fixed-shape kernel.
+  waste is bounded and each bucket compiles a tight fixed-shape kernel;
+* the paper's memory ceiling (§III-E, 89M edges on 3 GB) → the engine
+  (:class:`repro.core.engine.TriangleCounter`) slices each bucket under a
+  ``max_wedge_chunk`` element budget before invoking this kernel, padding
+  every slice to one static shape so chunk count never drives compiles.
 
 The v-side is tiled (``TLv``) and accumulated across the innermost grid
 dimension so wide buckets never exceed the VMEM budget; the output block

@@ -3,8 +3,14 @@
 ::
 
     python -m repro.launch.count --generator kronecker --scale 14
+    python -m repro.launch.count --generator kronecker --scale 14 --method auto
     python -m repro.launch.count --generator watts_strogatz --n 100000 --k 50
     python -m repro.launch.count --generator barabasi_albert --n 20000 --baseline
+    python -m repro.launch.count --scale 14 --max-wedge-chunk 1048576
+
+All counting routes through :class:`repro.core.TriangleCounter`;
+``--max-wedge-chunk`` bounds the device wedge buffer (memory-bounded edge
+partitioning) and the chunk/launch stats are printed after each run.
 """
 from __future__ import annotations
 
@@ -13,13 +19,9 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    count_triangles,
-    count_triangles_distributed,
-    count_triangles_numpy,
-    transitivity,
-)
-from repro.graphs import GRAPH_GENERATORS
+from repro.core import TriangleCounter, count_triangles_numpy
+from repro.core.engine import METHODS
+from repro.graphs import GRAPH_GENERATORS, graph_stats
 
 
 def build_graph(args) -> np.ndarray:
@@ -44,32 +46,51 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--beta", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--method", default="wedge_bsearch",
-                    choices=["wedge_bsearch", "panel", "pallas"])
+    ap.add_argument("--method", default="wedge_bsearch", choices=list(METHODS))
+    ap.add_argument("--max-wedge-chunk", type=int, default=None,
+                    help="wedge-buffer budget per launch (slots); enables "
+                         "memory-bounded edge partitioning")
     ap.add_argument("--baseline", action="store_true", help="also run NumPy CPU baseline")
     ap.add_argument("--distributed", action="store_true", help="shard over local devices")
     ap.add_argument("--clustering", action="store_true")
     args = ap.parse_args()
+    if args.max_wedge_chunk is not None and args.max_wedge_chunk < 1:
+        ap.error("--max-wedge-chunk must be a positive number of wedge slots")
 
     t0 = time.time()
     edges = build_graph(args)
-    print(f"graph: {int(edges.max())+1} nodes, {edges.shape[0]//2} edges "
+    stats = graph_stats(edges)
+    print(f"graph: {stats['n_nodes']} nodes, {stats['n_edges']} edges, "
+          f"max deg {stats['max_degree']}, skew {stats['skew']:.1f} "
           f"(built in {time.time()-t0:.2f}s)")
 
-    t0 = time.time()
-    t = count_triangles(edges, method=args.method)
-    dt = time.time() - t0
-    print(f"triangles[{args.method}] = {t}  ({dt*1e3:.1f} ms)")
+    mesh = None
+    if args.method == "distributed":
+        from repro.launch.mesh import make_local_mesh
 
-    if args.distributed:
+        mesh = make_local_mesh()
+    tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk,
+                         mesh=mesh)
+    t0 = time.time()
+    t = tc.count(edges)
+    dt = time.time() - t0
+    es = tc.last_stats
+    print(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
+          f"{es.n_chunks} chunk(s), peak wedge buffer {es.peak_wedge_buffer})")
+
+    if args.distributed and args.method != "distributed":
+        # cross-check the main schedule against the §III-E striping
+        # (pointless when the main count already ran distributed)
         import jax
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
+        tcd = TriangleCounter(method="distributed", mesh=mesh,
+                              max_wedge_chunk=args.max_wedge_chunk)
         t0 = time.time()
-        td = count_triangles_distributed(edges, mesh)
+        td = tcd.count(edges)
         print(f"triangles[distributed x{len(jax.devices())}] = {td} "
-              f"({(time.time()-t0)*1e3:.1f} ms)")
+              f"({(time.time()-t0)*1e3:.1f} ms; {tcd.last_stats.n_chunks} chunk(s))")
         assert td == t
 
     if args.baseline:
@@ -81,7 +102,9 @@ def main() -> None:
         assert tb == t
 
     if args.clustering:
-        print(f"transitivity = {transitivity(edges):.4f}")
+        # derive from the count and wedge total already in hand — no recount
+        trans = 3.0 * t / stats["total_wedges"] if stats["total_wedges"] else 0.0
+        print(f"transitivity = {trans:.4f}")
 
 
 if __name__ == "__main__":

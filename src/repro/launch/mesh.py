@@ -7,7 +7,15 @@ module never touches JAX device state — the dry-run driver must set
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5 has explicit axis types
+    from jax.sharding import AxisType
+
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # jax 0.4.x: every axis is implicitly auto
+    def _mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 __all__ = ["make_production_mesh", "make_local_mesh", "DATA_AXES", "ALL_AXES"]
 
@@ -19,7 +27,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh(data: int | None = None, model: int = 1):
@@ -29,5 +37,4 @@ def make_local_mesh(data: int | None = None, model: int = 1):
         data = n // model
     if data * model > n:
         raise ValueError(f"requested {data}×{model} mesh on {n} devices")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((data, model), ("data", "model"))

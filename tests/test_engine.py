@@ -1,0 +1,240 @@
+"""TriangleCounter engine: schedule unification + memory-bounded chunking.
+
+The acceptance contract: every schedule agrees with the NumPy oracle on
+the paper's graph families, and chunked counting (any `max_wedge_chunk`)
+is bit-identical to the unchunked path while the materialized wedge
+buffer never exceeds the budget.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    TriangleCounter,
+    accumulate_partials,
+    choose_method,
+    count_triangles,
+    count_triangles_numpy,
+    plan_edge_chunks,
+    transitivity,
+)
+from repro.core.engine import METHODS
+from repro.graphs import barabasi_albert, kronecker_rmat, watts_strogatz
+
+
+@pytest.fixture(scope="module")
+def family_graphs():
+    """The acceptance-criteria graphs: kron10 / BA / WS."""
+    return {
+        "kron10": kronecker_rmat(10, seed=0),
+        "barabasi_albert": barabasi_albert(2_000, 6, seed=0),
+        "watts_strogatz": watts_strogatz(3_000, 10, 0.1, seed=0),
+    }
+
+
+@pytest.fixture(scope="module")
+def family_oracle(family_graphs):
+    return {name: count_triangles_numpy(e) for name, e in family_graphs.items()}
+
+
+# ---------------------------------------------------------------------------
+# schedule unification
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["wedge_bsearch", "panel", "pallas", "auto"])
+def test_all_methods_match_numpy_oracle(family_graphs, family_oracle, method):
+    for name, e in family_graphs.items():
+        tc = TriangleCounter(method=method)
+        assert tc.count(e) == family_oracle[name], (name, method)
+        assert tc.last_stats is not None
+        assert tc.last_stats.method in METHODS[1:]  # resolved, never "auto"
+
+
+@pytest.mark.slow
+def test_distributed_method_matches_oracle_multidevice(family_oracle):
+    from conftest import run_multidevice
+
+    out = run_multidevice("""
+import jax
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+from repro.core import TriangleCounter, count_triangles_numpy
+from repro.graphs import kronecker_rmat, barabasi_albert, watts_strogatz
+graphs = {
+    "kron10": kronecker_rmat(10, seed=0),
+    "barabasi_albert": barabasi_albert(2_000, 6, seed=0),
+    "watts_strogatz": watts_strogatz(3_000, 10, 0.1, seed=0),
+}
+for name, e in graphs.items():
+    expect = count_triangles_numpy(e)
+    tc = TriangleCounter(method="distributed", mesh=mesh)
+    assert tc.count(e) == expect, (name, tc.count(e), expect)
+    # chunking composes with the striping: force several column chunks
+    total = tc.last_stats.total_wedges
+    tcc = TriangleCounter(method="distributed", mesh=mesh,
+                          max_wedge_chunk=max(total // 64, 1))
+    assert tcc.count(e) == expect, name
+    assert tcc.last_stats.n_chunks >= 4, (name, tcc.last_stats)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_distributed_single_device_mesh(family_graphs, family_oracle):
+    """method="distributed" on the 1-device default mesh is still exact."""
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    e = family_graphs["kron10"]
+    tc = TriangleCounter(method="distributed", mesh=mesh)
+    assert tc.count(e) == family_oracle["kron10"]
+
+
+# ---------------------------------------------------------------------------
+# memory-bounded chunking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("divisor", [4, 16, 64])
+def test_chunked_equals_unchunked_all_generators(family_graphs, family_oracle, divisor):
+    for name, e in family_graphs.items():
+        base = TriangleCounter(method="wedge_bsearch")
+        expect = base.count(e)
+        assert expect == family_oracle[name]
+        total = base.last_stats.total_wedges
+        budget = max(total // divisor, 1)
+        tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
+        assert tc.count(e) == expect, (name, divisor)
+        st = tc.last_stats
+        assert st.n_chunks >= min(divisor, 2), (name, st)
+        # budget respected: these budgets all exceed the forward-bound
+        # max fan-out (≤ √(2m)), so the peak buffer must obey them exactly
+        assert st.peak_wedge_buffer <= budget, (name, st)
+
+
+def test_budget_forces_four_chunks_and_stays_bounded(family_graphs):
+    e = family_graphs["kron10"]
+    base = TriangleCounter(method="wedge_bsearch")
+    expect = base.count(e)
+    total = base.last_stats.total_wedges
+    budget = total // 5
+    tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
+    assert tc.count(e) == expect
+    st = tc.last_stats
+    assert st.n_chunks >= 4
+    assert st.peak_wedge_buffer <= budget
+
+
+def test_budget_below_single_edge_fanout(family_graphs, family_oracle):
+    """A budget of 1 slot cannot split an adjacency list: the engine bumps
+    the buffer to the max fan-out and still counts exactly."""
+    for name, e in family_graphs.items():
+        tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=1)
+        assert tc.count(e) == family_oracle[name], name
+        st = tc.last_stats
+        assert st.n_chunks >= 4
+        # the effective buffer is bumped to (exactly) the largest
+        # single-edge fan-out — far below the full wedge total
+        assert st.peak_wedge_buffer < st.total_wedges
+        assert st.peak_wedge_buffer <= int(np.sqrt(e.shape[0])) + 1
+
+
+def test_panel_and_pallas_chunked(family_graphs, family_oracle):
+    e = family_graphs["kron10"]
+    for method in ["panel", "pallas"]:
+        un = TriangleCounter(method=method)
+        assert un.count(e) == family_oracle["kron10"]
+        ck = TriangleCounter(method=method, max_wedge_chunk=512)
+        assert ck.count(e) == family_oracle["kron10"], method
+        assert ck.last_stats.n_chunks > un.last_stats.n_chunks, method
+        # every panel gather stays within ~budget elements (one bucket row
+        # may exceed it only when a single width-`w` row does)
+        assert ck.last_stats.peak_wedge_buffer <= max(512, max(ck.widths))
+
+
+def test_facade_kwarg_routes_chunking(family_graphs, family_oracle):
+    e = family_graphs["kron10"]
+    assert count_triangles(e, max_wedge_chunk=333) == family_oracle["kron10"]
+
+
+def test_plan_edge_chunks_invariants():
+    rng = np.random.default_rng(0)
+    reps = rng.integers(0, 50, size=500)
+    for budget in [None, 10_000, 1_000, 120, 49, 1]:
+        bounds, eff = plan_edge_chunks(reps, budget)
+        # exact cover, in order, no overlap
+        assert bounds[0][0] == 0 and bounds[-1][1] == len(reps)
+        for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+            assert a1 == b0
+        # every chunk within the effective budget
+        for s, t in bounds:
+            assert reps[s:t].sum() <= eff
+        if budget is not None:
+            assert eff >= min(budget, int(reps.max()))
+
+
+# ---------------------------------------------------------------------------
+# uint64 accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_uint64_accumulation_regression():
+    """Partial sums near int32 max must not wrap when combined on host —
+    the paper's Table I counts (3.8B) exceed 2³¹."""
+    near_max = np.int32(2**31 - 1)
+    partials = [near_max] * 4
+    expect = 4 * (2**31 - 1)  # 8589934588 > 2**32
+    assert accumulate_partials(partials) == expect
+    # mixed arrays and scalars, including empty
+    parts = [np.array([near_max, near_max], np.int32), np.int32(7), np.array([], np.int32)]
+    assert accumulate_partials(parts) == 2 * (2**31 - 1) + 7
+
+
+def test_accumulation_matches_over_many_chunks(family_graphs, family_oracle):
+    """Many tiny chunks exercise the host accumulation path end to end."""
+    e = family_graphs["watts_strogatz"]
+    tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=64)
+    assert tc.count(e) == family_oracle["watts_strogatz"]
+    assert tc.last_stats.n_chunks > 100
+
+
+# ---------------------------------------------------------------------------
+# per-node / clustering / auto dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_per_node_and_clustering_chunked(family_graphs, family_oracle):
+    e = family_graphs["kron10"]
+    tc = TriangleCounter(max_wedge_chunk=1_000)
+    pn = tc.per_node(e)
+    assert int(pn.sum()) // 3 == family_oracle["kron10"]
+    cc = tc.clustering(e)
+    assert cc.shape == pn.shape
+    assert (cc >= 0).all() and (cc <= 1).all()
+    assert abs(tc.transitivity(e) - transitivity(e)) < 1e-12
+
+
+def test_auto_dispatch_stats():
+    assert choose_method(max_out_degree=10, mean_out_degree=5.0, backend="cpu") == "panel"
+    assert (
+        choose_method(max_out_degree=4000, mean_out_degree=8.0, backend="cpu")
+        == "wedge_bsearch"
+    )
+    assert (
+        choose_method(max_out_degree=100, mean_out_degree=50.0, backend="tpu")
+        == "pallas"
+    )
+
+
+def test_engine_rejects_bad_args():
+    with pytest.raises(ValueError):
+        TriangleCounter(method="nope")
+    with pytest.raises(ValueError):
+        TriangleCounter(method="distributed")  # no mesh
+    with pytest.raises(ValueError):
+        TriangleCounter(max_wedge_chunk=0)
+
+
+def test_empty_graph():
+    tc = TriangleCounter()
+    assert tc.count(np.zeros((0, 2), np.int32)) == 0
+    assert tc.per_node(np.zeros((0, 2), np.int32), n_nodes=5).shape == (5,)

@@ -1,7 +1,10 @@
 """Generators, formats, sampler, batching."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; use the local stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.graphs import (
     barabasi_albert,

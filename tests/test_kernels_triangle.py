@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; use the local stub
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import bucketize_edges, count_triangles, gather_panels, preprocess
 from repro.kernels.triangle_count import intersect_count_pallas
