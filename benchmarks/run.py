@@ -12,6 +12,7 @@ from . import (
     kernel_micro,
     multidevice,
     section5_approx,
+    streaming,
     table1_runtime,
     table2_roofline,
 )
@@ -26,6 +27,7 @@ SUITES = {
     "section5": section5_approx.run,   # §V       — exact vs DOULION
     "kernels": kernel_micro.run,       # Pallas kernel micro-sweeps
     "chunking": engine_chunking.run,   # engine — memory-bounded partitioning
+    "streaming": streaming.run,        # incremental updates vs full recount
 }
 
 

@@ -10,6 +10,10 @@ Public API::
     t = count_triangles(edge_array, method="pallas")    # Pallas kernel path
     t = count_triangles_distributed(edge_array, mesh)   # multi-pod (§III-E)
 
+    itc = IncrementalTriangleCounter(edge_array)        # dynamic graphs
+    itc.insert(new_edges); itc.delete(old_edges)        # batched deltas
+    itc.count                                           # maintained, O(1)
+
 :class:`TriangleCounter` (:mod:`repro.core.engine`) unifies the four
 schedules — ``wedge_bsearch``, ``panel``, ``pallas``, ``distributed`` —
 behind one API with memory-bounded edge partitioning; the per-schedule
@@ -46,6 +50,7 @@ from .baseline import (
     count_triangles_bruteforce,
 )
 from .approx import count_triangles_doulion
+from .incremental import IncrementalTriangleCounter, UpdateStats
 from .distributed import (
     stripe_edges,
     plan_striped_chunks,
@@ -81,6 +86,8 @@ __all__ = [
     "count_triangles_numpy",
     "count_triangles_bruteforce",
     "count_triangles_doulion",
+    "IncrementalTriangleCounter",
+    "UpdateStats",
     "stripe_edges",
     "plan_striped_chunks",
     "make_distributed_count_fn",

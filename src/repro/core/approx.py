@@ -3,26 +3,47 @@
 The paper positions its exact GPU counter against sampling approximations
 such as DOULION (Tsourakakis et al., KDD'09): keep every undirected edge
 with probability ``p`` and rescale the sparsified count by ``1/p³``.  We
-implement it on top of the same exact core so the accuracy/speed tradeoff
-in the paper's §V can be reproduced as a benchmark.
+implement it on top of the same exact engine so the accuracy/speed
+tradeoff in the paper's §V can be reproduced as a benchmark — and so the
+estimator inherits every engine capability: ``method="auto"`` dispatch,
+memory-bounded edge partitioning via ``max_wedge_chunk``, uint64-safe
+accumulation.  It is also the documented overload fallback for the
+streaming service (see ``launch/serve_graph.py``): when update traffic
+outruns the exact incremental path, sparsified recounts bound the work.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .count import count_triangles
-
 __all__ = ["count_triangles_doulion"]
 
 
 def count_triangles_doulion(
-    edges: np.ndarray, p: float = 0.25, seed: int = 0, method: str = "wedge_bsearch"
-) -> float:
+    edges: np.ndarray,
+    p: float = 0.25,
+    seed: int = 0,
+    method: str = "auto",
+    max_wedge_chunk: int | None = None,
+) -> float | int:
+    """DOULION estimate of the triangle count.
+
+    Routes through :class:`repro.core.engine.TriangleCounter`, so
+    ``method`` accepts every engine schedule (``"auto"`` included) and
+    ``max_wedge_chunk`` bounds the device wedge buffer of the sparsified
+    count exactly as for a full count.  ``p == 1.0`` keeps every edge:
+    the result is the exact count, returned as an ``int``.
+    """
+    from .engine import TriangleCounter  # late import: engine imports count
+
     if not 0.0 < p <= 1.0:
         raise ValueError("p must be in (0, 1]")
     edges = np.asarray(edges)
     if edges.size == 0:
-        return 0.0
+        return 0 if p == 1.0 else 0.0
+    tc = TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk)
+    n_nodes = int(edges.max()) + 1
+    if p == 1.0:  # no sparsification — exact count, exact type
+        return tc.count(edges, n_nodes=n_nodes)
     rng = np.random.default_rng(seed)
     lo = np.minimum(edges[:, 0], edges[:, 1])
     hi = np.maximum(edges[:, 0], edges[:, 1])
@@ -32,5 +53,5 @@ def count_triangles_doulion(
     kept = edges[keep_undirected[inverse]]
     if kept.size == 0:
         return 0.0
-    t = count_triangles(kept, n_nodes=int(edges.max()) + 1, method=method)
+    t = tc.count(kept, n_nodes=n_nodes)
     return float(t) / p**3

@@ -150,9 +150,20 @@ def plan_edge_chunks(reps: np.ndarray, budget: int | None):
 
 @dataclasses.dataclass(frozen=True)
 class EngineStats:
-    """What the last engine call actually did (for tests and tuning)."""
+    """What the last engine call actually did (for tests and tuning).
 
-    method: str                  # resolved schedule, never "auto"
+    ``resolved_method`` is what configuration + ``"auto"`` dispatch chose;
+    ``method`` is what actually executed.  They differ only where the
+    engine has a single implementation and silently falls back — e.g.
+    :meth:`TriangleCounter.per_node` always runs the wedge schedule, so a
+    ``method="panel"`` counter reports ``resolved_method="panel"``,
+    ``method="wedge_bsearch"`` there.  ``peak_wedge_buffer`` is the
+    largest buffer a launch actually materialized (the max chunk load) —
+    not the requested budget, which lives in ``wedge_budget``.
+    """
+
+    method: str                  # executed schedule, never "auto"
+    resolved_method: str         # configured/dispatched schedule, never "auto"
     n_chunks: int                # device launches for the counting phase
     peak_wedge_buffer: int       # largest buffer materialized per launch
     wedge_budget: int | None     # requested budget (None = unbounded)
@@ -303,13 +314,15 @@ class TriangleCounter:
 
         Always runs the (chunked) wedge schedule — the panel and
         distributed schedules produce global partials only; per-node
-        scatter is the wedge kernel's native output.
+        scatter is the wedge kernel's native output.  ``last_stats``
+        records this fallback honestly: ``resolved_method`` is what the
+        configuration/dispatch chose, ``method`` is ``"wedge_bsearch"``.
         """
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             n = n_nodes or 0
             return np.zeros((n,), np.int64)
-        return self._per_node_wedge(csr)
+        return self._per_node_wedge(csr, resolved=self._resolve(csr))
 
     def clustering(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Local clustering coefficients c(v) = 2·T(v) / (deg(v)·(deg(v)−1))."""
@@ -345,9 +358,9 @@ class TriangleCounter:
             # no CSR to resolve "auto" against; record the trivial schedule
             resolved = self.method if self.method != "auto" else "wedge_bsearch"
             self.last_stats = EngineStats(
-                method=resolved, n_chunks=0, peak_wedge_buffer=0,
-                wedge_budget=self.max_wedge_chunk, total_wedges=0,
-                n_directed_edges=0,
+                method=resolved, resolved_method=resolved, n_chunks=0,
+                peak_wedge_buffer=0, wedge_budget=self.max_wedge_chunk,
+                total_wedges=0, n_directed_edges=0,
             )
             return None
         if n_nodes is None:
@@ -375,14 +388,21 @@ class TriangleCounter:
     def _wedge_chunks(self, csr: OrientedCSR):
         """Lazily yield −1-padded fixed-shape (src, dst) chunks.
 
-        Returns ``(generator, n_chunks, eff, total_wedges)``; only one
-        padded chunk copy is resident at a time, so host overhead stays
-        O(chunk) in the larger-than-memory regime the budget targets.
+        Returns ``(generator, n_chunks, peak, total_wedges)`` where
+        ``peak`` is the true per-launch buffer: the largest chunk's wedge
+        load, which the kernels materialize exactly — it can undercut the
+        planner's effective budget when no greedy chunk fills it.  Only
+        one padded chunk copy is resident at a time, so host overhead
+        stays O(chunk) in the larger-than-memory regime the budget
+        targets.
         """
         src = np.asarray(csr.src)
         out_deg = np.asarray(csr.out_degree)
         reps = out_deg[src].astype(np.int64)
-        bounds, eff = plan_edge_chunks(reps, self.max_wedge_chunk)
+        bounds, _ = plan_edge_chunks(reps, self.max_wedge_chunk)
+        cum = np.concatenate([[0], np.cumsum(reps)])
+        peak = max(int(cum[end] - cum[start]) for start, end in bounds)
+        peak = max(peak, 1)
         edges_per_chunk = max(end - start for start, end in bounds)
 
         def gen():
@@ -401,11 +421,12 @@ class TriangleCounter:
                     d = np.concatenate([d, fill])
                 yield s.astype(np.int32, copy=False), d.astype(np.int32, copy=False)
 
-        return gen(), len(bounds), eff, int(reps.sum())
+        return gen(), len(bounds), peak, int(reps.sum())
 
-    def _record(self, method, n_chunks, peak, total_wedges, m_dir):
+    def _record(self, method, n_chunks, peak, total_wedges, m_dir, resolved=None):
         self.last_stats = EngineStats(
             method=method,
+            resolved_method=resolved or method,
             n_chunks=n_chunks,
             peak_wedge_buffer=peak,
             wedge_budget=self.max_wedge_chunk,
@@ -416,31 +437,32 @@ class TriangleCounter:
     # -- wedge_bsearch schedule ---------------------------------------------
 
     def _count_wedge(self, csr: OrientedCSR) -> int:
-        chunks, n_chunks, eff, total = self._wedge_chunks(csr)
+        chunks, n_chunks, peak, total = self._wedge_chunks(csr)
         steps = self._search_steps(csr)
         running = np.uint64(0)
         for s, d in chunks:
             partial = _chunk_count_kernel(
                 jnp.asarray(s), jnp.asarray(d),
                 csr.row_offsets, csr.col, csr.out_degree,
-                wedge_budget=eff, n_steps=steps,
+                wedge_budget=peak, n_steps=steps,
             )
             running += np.uint64(accumulate_partials([partial]))
-        self._record("wedge_bsearch", n_chunks, eff, total, csr.n_directed_edges)
+        self._record("wedge_bsearch", n_chunks, peak, total, csr.n_directed_edges)
         return int(running)
 
-    def _per_node_wedge(self, csr: OrientedCSR) -> np.ndarray:
-        chunks, n_chunks, eff, total = self._wedge_chunks(csr)
+    def _per_node_wedge(self, csr: OrientedCSR, resolved: str) -> np.ndarray:
+        chunks, n_chunks, peak, total = self._wedge_chunks(csr)
         steps = self._search_steps(csr)
         out = np.zeros((csr.n_nodes,), np.int64)
         for s, d in chunks:
             part = _chunk_per_node_kernel(
                 jnp.asarray(s), jnp.asarray(d),
                 csr.row_offsets, csr.col, csr.out_degree,
-                wedge_budget=eff, n_steps=steps,
+                wedge_budget=peak, n_steps=steps,
             )
             out += np.asarray(part, dtype=np.int64)
-        self._record("wedge_bsearch", n_chunks, eff, total, csr.n_directed_edges)
+        self._record("wedge_bsearch", n_chunks, peak, total,
+                     csr.n_directed_edges, resolved=resolved)
         return out
 
     # -- panel / pallas schedules -------------------------------------------

@@ -1,0 +1,384 @@
+"""Incremental triangle counting over edge streams (batched delta updates).
+
+The engine in :mod:`repro.core.engine` is one-shot: canonicalize, orient,
+count.  A serving workload over a *changing* graph cannot afford to
+recount 89M edges per update, so :class:`IncrementalTriangleCounter`
+maintains the global triangle count and the per-node incidences under
+batched ``insert(edges)`` / ``delete(edges)``, touching only the
+triangles incident to the updated edges — the batched delta-counting
+discipline surveyed by Wang et al. (*A Comparative Study on Exact
+Triangle Counting Algorithms on the GPU*, 2018).
+
+How a batch is counted
+======================
+
+Let Δ be the batch's undirected edges (deduplicated, self loops dropped,
+already-present inserts / never-present deletes filtered out), and let
+``G⁻`` / ``G⁺`` be the graph without / with Δ.  A triangle *touched* by
+the batch contains ``k ∈ {1, 2, 3}`` Δ-edges, and probing each Δ-edge
+``(u, v)`` for common neighbors ``|N(u) ∩ N(v)|`` counts it once per
+Δ-edge it contains.  Three probe passes over the same Δ edge list —
+against the adjacency of ``G⁺`` (``S⁺``, counts each triangle ``k``
+times), of ``G⁻`` (``S⁻``, counts only the ``k = 1`` triangles), and of
+Δ alone (``S^Δ``, counts the all-new ``k = 3`` triangles three times) —
+pin down the touched-triangle total exactly:
+
+    ΔT  =  S⁻  +  (S⁺ − S⁻ − S^Δ) / 2  +  S^Δ / 3
+
+(the middle term is the ``k = 2`` count — the standard new–new
+double-count correction; both divisions are exact).  The identical
+combination applied to the per-node scatter outputs yields the per-node
+incidence delta, because a touched triangle contributes ``k`` to each of
+its three vertices in the ``S⁺`` scatter, ``[k = 1]`` in ``S⁻`` and
+``3·[k = 3]`` in ``S^Δ``.  Insertions add ΔT; deletions subtract the
+same quantity computed with the roles of ``G⁻``/``G⁺`` swapped.
+
+Every probe pass runs the engine's own chunk kernel
+(:func:`repro.core.engine._chunk_per_node_kernel`; each closed wedge
+scatters +1 to exactly three vertices, so the hit total that
+``_chunk_count_kernel`` would compute falls out of the same launch as
+``Σ per_node / 3``) on just the **delta wedge workload** —
+``Σ_{(u,v) ∈ Δ} min(deg u, deg v)`` candidate slots (shorter-side
+enumeration) instead of the full graph's ``Σ deg⁺`` — and honors
+``max_wedge_chunk`` through the same
+:func:`repro.core.engine.plan_edge_chunks` partitioning, so update
+batches obey the same per-launch memory budget as full counts.
+
+Compile stability
+=================
+
+A dynamic graph changes array shapes every batch, which would recompile
+the jitted chunk kernels on every update.  Shapes fed to the kernels are
+therefore bucketed: the adjacency ``col`` array and the node axis pad to
+the next power of two, the probe-edge axis pads to the chunk plan's
+width rounded to a power of two, and with no explicit budget the wedge
+buffer itself rounds up to a power of two (with a budget, the buffer is
+the budget — stable by construction).  Steady-state serving therefore
+reuses a handful of compiled kernels (see ``launch/serve_graph.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import (
+    TriangleCounter,
+    _chunk_per_node_kernel,
+    plan_edge_chunks,
+)
+
+__all__ = ["IncrementalTriangleCounter", "UpdateStats"]
+
+_MASK32 = np.int64(0xFFFFFFFF)
+_COL_PAD = np.int32(2**31 - 1)  # sorted-tail sentinel; never inside a row
+
+
+def _pack(u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Directed edge key u<<32|v (the §III-D2 packed-key representation)."""
+    return u.astype(np.int64) << np.int64(32) | v.astype(np.int64)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateStats:
+    """What the last ``insert``/``delete`` actually did."""
+
+    op: str                  # "insert" | "delete" | "noop"
+    n_batch_edges: int       # undirected edges actually applied (post-filter)
+    n_probe_launches: int    # chunk-kernel launches across the three probes
+    peak_wedge_buffer: int   # largest wedge buffer materialized per launch
+    wedge_budget: int | None  # the configured max_wedge_chunk
+    delta: int               # signed change in the global triangle count
+
+
+class IncrementalTriangleCounter:
+    """Exact triangle counts over a dynamic graph, updated in batches.
+
+    Parameters
+    ----------
+    edges:
+        Optional initial edges (any mix of directions/duplicates; self
+        loops dropped).  The bootstrap count runs through the batch
+        engine (:class:`repro.core.engine.TriangleCounter`), so it is
+        memory-bounded exactly like a standalone full count.
+    n_nodes:
+        Optional node-count floor; the id space also grows automatically
+        when a batch introduces larger vertex ids.
+    max_wedge_chunk:
+        Per-launch wedge-buffer budget (slots) applied to the bootstrap
+        *and* to every update batch's probe workload.
+    method:
+        Engine schedule for the bootstrap count only (updates always run
+        the wedge chunk kernels, whose per-node scatter is the native
+        output the maintained state needs).
+
+    After any update, :attr:`last_update_stats` describes what ran.
+
+    Invariant (the oracle property the tests enforce): after any
+    interleaving of ``insert``/``delete`` batches, :attr:`count` equals
+    ``TriangleCounter(method="auto").count(self.current_edges())``.
+    """
+
+    def __init__(
+        self,
+        edges=None,
+        n_nodes: int | None = None,
+        max_wedge_chunk: int | None = None,
+        method: str = "auto",
+    ):
+        if max_wedge_chunk is not None and max_wedge_chunk < 1:
+            raise ValueError("max_wedge_chunk must be positive")
+        self.max_wedge_chunk = max_wedge_chunk
+        self._n = int(n_nodes) if n_nodes else 0
+        self._adj = np.empty(0, np.int64)  # sorted directed keys, both dirs
+        self._count = 0
+        self._per_node = np.zeros(self._n, np.int64)
+        self._deg = np.zeros(self._n, np.int64)
+        self.last_update_stats: UpdateStats | None = None
+        if edges is not None and np.asarray(edges).size:
+            und = self._normalize_batch(edges)
+            if und.shape[0]:
+                self._grow(int(und.max()) + 1)
+                self._adj = np.sort(
+                    np.concatenate([_pack(und[:, 0], und[:, 1]),
+                                    _pack(und[:, 1], und[:, 0])])
+                )
+                np.add.at(self._deg, und[:, 0], 1)
+                np.add.at(self._deg, und[:, 1], 1)
+                tc = TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk)
+                canon = self.current_edges()
+                self._count = tc.count(canon, n_nodes=self._n)
+                self._per_node = tc.per_node(canon, n_nodes=self._n).astype(np.int64)
+
+    # -- read API (the serving queries) -------------------------------------
+
+    @property
+    def count(self) -> int:
+        """Current global triangle count (maintained, O(1) to read)."""
+        return self._count
+
+    @property
+    def n_nodes(self) -> int:
+        return self._n
+
+    @property
+    def n_edges(self) -> int:
+        """Current undirected edge count."""
+        return self._adj.shape[0] // 2
+
+    def per_node(self) -> np.ndarray:
+        """Per-vertex triangle incidences (maintained, copied out)."""
+        return self._per_node.copy()
+
+    def degrees(self) -> np.ndarray:
+        """Current undirected degree histogram (maintained, copied out)."""
+        return self._deg.copy()
+
+    def clustering(self) -> np.ndarray:
+        """Local clustering coefficients from the maintained state."""
+        from .clustering import clustering_from_counts
+
+        return clustering_from_counts(self._per_node, self._deg)
+
+    def transitivity(self) -> float:
+        """Global transitivity ratio from the maintained state."""
+        from .clustering import transitivity_from_counts
+
+        return transitivity_from_counts(self._count, self._deg)
+
+    def current_edges(self) -> np.ndarray:
+        """The live graph as a canonical edge array (both directions)."""
+        src = (self._adj >> np.int64(32)).astype(np.int32)
+        dst = (self._adj & _MASK32).astype(np.int32)
+        return np.stack([src, dst], axis=1)
+
+    # -- update API ---------------------------------------------------------
+
+    def insert(self, edges) -> int:
+        """Insert a batch of undirected edges; returns the count delta (≥ 0).
+
+        Self loops, in-batch duplicates and already-present edges are
+        ignored, so inserts are idempotent.
+        """
+        und = self._normalize_batch(edges)
+        und = und[~self._member(und)]
+        if und.shape[0] == 0:
+            self._record("noop", 0, 0, 0, 0)
+            return 0
+        self._grow(int(und.max()) + 1)
+        delta_dir = np.sort(
+            np.concatenate([_pack(und[:, 0], und[:, 1]), _pack(und[:, 1], und[:, 0])])
+        )
+        adj_new = np.insert(self._adj, np.searchsorted(self._adj, delta_dir), delta_dir)
+        d_count, d_pn, launches, peak = self._delta_triangles(
+            und, adj_without=self._adj, adj_with=adj_new, adj_delta=delta_dir
+        )
+        self._adj = adj_new
+        self._count += d_count
+        self._per_node += d_pn
+        np.add.at(self._deg, und[:, 0], 1)
+        np.add.at(self._deg, und[:, 1], 1)
+        self._record("insert", und.shape[0], launches, peak, d_count)
+        return d_count
+
+    def delete(self, edges) -> int:
+        """Delete a batch of undirected edges; returns the count delta (≤ 0).
+
+        Edges not currently present (including never-inserted ones) are
+        ignored, so deletes are idempotent.
+        """
+        und = self._normalize_batch(edges)
+        und = und[self._member(und)]
+        if und.shape[0] == 0:
+            self._record("noop", 0, 0, 0, 0)
+            return 0
+        delta_dir = np.sort(
+            np.concatenate([_pack(und[:, 0], und[:, 1]), _pack(und[:, 1], und[:, 0])])
+        )
+        keep = np.ones(self._adj.shape[0], bool)
+        keep[np.searchsorted(self._adj, delta_dir)] = False
+        adj_rem = self._adj[keep]
+        d_count, d_pn, launches, peak = self._delta_triangles(
+            und, adj_without=adj_rem, adj_with=self._adj, adj_delta=delta_dir
+        )
+        self._adj = adj_rem
+        self._count -= d_count
+        self._per_node -= d_pn
+        np.subtract.at(self._deg, und[:, 0], 1)
+        np.subtract.at(self._deg, und[:, 1], 1)
+        self._record("delete", und.shape[0], launches, peak, -d_count)
+        return -d_count
+
+    def apply(self, insert=None, delete=None) -> int:
+        """Apply one stream batch (arrivals first, then evictions)."""
+        delta = 0
+        if insert is not None and np.asarray(insert).size:
+            delta += self.insert(insert)
+        if delete is not None and np.asarray(delete).size:
+            delta += self.delete(delete)
+        return delta
+
+    # -- internals ----------------------------------------------------------
+
+    def _record(self, op, n_batch, launches, peak, delta):
+        self.last_update_stats = UpdateStats(
+            op=op, n_batch_edges=n_batch, n_probe_launches=launches,
+            peak_wedge_buffer=peak, wedge_budget=self.max_wedge_chunk,
+            delta=delta,
+        )
+
+    def _grow(self, n: int) -> None:
+        if n > self._n:
+            pad = np.zeros(n - self._n, np.int64)
+            self._per_node = np.concatenate([self._per_node, pad])
+            self._deg = np.concatenate([self._deg, pad])
+            self._n = n
+
+    @staticmethod
+    def _normalize_batch(edges) -> np.ndarray:
+        """Unique undirected (lo, hi) pairs; self loops and dups dropped."""
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if (edges < 0).any():
+            raise ValueError("vertex ids must be non-negative")
+        edges = edges[edges[:, 0] != edges[:, 1]]
+        if edges.shape[0] == 0:
+            return np.empty((0, 2), np.int64)
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        keys = np.unique(_pack(lo, hi))
+        return np.stack([keys >> np.int64(32), keys & _MASK32], axis=1)
+
+    def _member(self, und: np.ndarray) -> np.ndarray:
+        """Membership mask of undirected (lo, hi) pairs in the live graph."""
+        if und.shape[0] == 0 or self._adj.shape[0] == 0:
+            return np.zeros(und.shape[0], bool)
+        keys = _pack(und[:, 0], und[:, 1])
+        idx = np.searchsorted(self._adj, keys)
+        present = np.zeros(und.shape[0], bool)
+        inb = idx < self._adj.shape[0]
+        present[inb] = self._adj[idx[inb]] == keys[inb]
+        return present
+
+    def _delta_triangles(self, und, *, adj_without, adj_with, adj_delta):
+        """Touched-triangle total + per-node deltas via the three probes."""
+        pu = und[:, 0].astype(np.int32)
+        pv = und[:, 1].astype(np.int32)
+        s_wo, p_wo, l1, k1 = self._probe(pu, pv, adj_without)
+        s_wi, p_wi, l2, k2 = self._probe(pu, pv, adj_with)
+        s_dl, p_dl, l3, k3 = self._probe(pu, pv, adj_delta)
+        two_new = s_wi - s_wo - s_dl
+        assert two_new >= 0 and two_new % 2 == 0, (s_wi, s_wo, s_dl)
+        assert s_dl % 3 == 0, s_dl
+        d_count = s_wo + two_new // 2 + s_dl // 3
+        d_pn = p_wo + (p_wi - p_wo - p_dl) // 2 + p_dl // 3
+        return d_count, d_pn, l1 + l2 + l3, max(k1, k2, k3)
+
+    def _probe(self, pu, pv, adj):
+        """Σ |N(u) ∩ N(v)| over probe edges + its per-node scatter.
+
+        ``adj`` is a sorted directed-key array (the adjacency to close
+        wedges against).  Enumerates candidates from the shorter endpoint
+        list and closes with the engine's chunk kernels under the
+        ``max_wedge_chunk`` budget.  Returns
+        ``(hits, per_node, n_launches, peak_buffer)``.
+        """
+        n = self._n
+        if pu.shape[0] == 0 or adj.shape[0] == 0:
+            return 0, np.zeros(n, np.int64), 0, 0
+        src_k = (adj >> np.int64(32)).astype(np.int64)
+        col = (adj & _MASK32).astype(np.int32)
+        # node axis pads to a power of two: extra rows are empty, so the
+        # kernels see a handful of stable shapes as the graph grows
+        n_pad = _next_pow2(n)
+        row = np.searchsorted(src_k, np.arange(n_pad + 1, dtype=np.int64)).astype(
+            np.int32
+        )
+        deg = row[1:] - row[:-1]
+        # shorter-side enumeration: |N(u) ∩ N(v)| is symmetric, so expand
+        # the smaller list and binary-search the larger (§Perf "opt")
+        swap = deg[pv] < deg[pu]
+        eu = np.where(swap, pv, pu).astype(np.int32)
+        ev = np.where(swap, pu, pv).astype(np.int32)
+        reps = deg[eu].astype(np.int64)
+        bounds, eff = plan_edge_chunks(reps, self.max_wedge_chunk)
+        if self.max_wedge_chunk is None:
+            # no budget to honor → round the one-shot buffer up for
+            # compile stability across growing batches
+            eff = _next_pow2(eff)
+        elif len(bounds) == 1 and eff < self.max_wedge_chunk:
+            # same stability trick, capped so the budget stays honored
+            eff = min(self.max_wedge_chunk, _next_pow2(eff))
+        edges_per_chunk = _next_pow2(max(end - start for start, end in bounds))
+        m_valid = col.shape[0]
+        col_pad = _next_pow2(m_valid)
+        if col_pad > m_valid:
+            col = np.concatenate([col, np.full(col_pad - m_valid, _COL_PAD)])
+        # padded length bounds every row, so the step count is stable per
+        # col bucket; overshooting the true ⌈log₂ deg_max⌉ is harmless
+        n_steps = max(1, int(np.ceil(np.log2(col_pad + 1))))
+        row_j = jnp.asarray(row)
+        col_j = jnp.asarray(col)
+        deg_j = jnp.asarray(deg)
+        per_node = np.zeros(n_pad, np.int64)
+        for start, end in bounds:
+            pad = edges_per_chunk - (end - start)
+            s, d = eu[start:end], ev[start:end]
+            if pad:
+                fill = np.full(pad, -1, np.int32)
+                s = np.concatenate([s, fill])
+                d = np.concatenate([d, fill])
+            pn = _chunk_per_node_kernel(
+                jnp.asarray(s), jnp.asarray(d), row_j, col_j, deg_j,
+                wedge_budget=eff, n_steps=n_steps,
+            )
+            per_node += np.asarray(pn, dtype=np.int64)
+        # every hit scatters +1 to exactly u, v and w, so the per-node
+        # output carries the hit total — one kernel per chunk does both jobs
+        total = int(per_node.sum())
+        assert total % 3 == 0, total
+        return total // 3, per_node[:n], len(bounds), eff

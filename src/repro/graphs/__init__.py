@@ -1,4 +1,4 @@
-"""Graph data pipeline: generators, formats, samplers, batching."""
+"""Graph data pipeline: generators, formats, samplers, batching, streams."""
 from .formats import (
     canonicalize_edges,
     edge_array_to_csr,
@@ -15,6 +15,13 @@ from .generators import (
     GRAPH_GENERATORS,
 )
 from .sampling import SampledBlocks, sample_blocks
+from .streams import (
+    StreamBatch,
+    undirected_pairs,
+    temporal_edge_stream,
+    sliding_window_stream,
+    STREAM_GENERATORS,
+)
 from .batching import GraphBatch, collate_graphs, random_molecule_batch
 
 __all__ = [
@@ -29,6 +36,11 @@ __all__ = [
     "watts_strogatz",
     "erdos_renyi",
     "GRAPH_GENERATORS",
+    "StreamBatch",
+    "undirected_pairs",
+    "temporal_edge_stream",
+    "sliding_window_stream",
+    "STREAM_GENERATORS",
     "SampledBlocks",
     "sample_blocks",
     "GraphBatch",

@@ -3,14 +3,18 @@
 ::
 
     python -m repro.launch.count --generator kronecker --scale 14
-    python -m repro.launch.count --generator kronecker --scale 14 --method auto
+    python -m repro.launch.count --generator kronecker --scale 14 --method panel
     python -m repro.launch.count --generator watts_strogatz --n 100000 --k 50
     python -m repro.launch.count --generator barabasi_albert --n 20000 --baseline
     python -m repro.launch.count --scale 14 --max-wedge-chunk 1048576
+    python -m repro.launch.count --scale 12 --distributed   # §III-E striping
 
-All counting routes through :class:`repro.core.TriangleCounter`;
+All counting routes through :class:`repro.core.TriangleCounter` with
+``auto`` dispatch as the front door (override with ``--method``);
 ``--max-wedge-chunk`` bounds the device wedge buffer (memory-bounded edge
 partitioning) and the chunk/launch stats are printed after each run.
+``--distributed`` routes the count through the striped multi-device
+schedule and refuses to combine with a conflicting explicit ``--method``.
 """
 from __future__ import annotations
 
@@ -46,7 +50,8 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--beta", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--method", default="wedge_bsearch", choices=list(METHODS))
+    ap.add_argument("--method", default=None, choices=list(METHODS),
+                    help="counting schedule (default: auto dispatch)")
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
                     help="wedge-buffer budget per launch (slots); enables "
                          "memory-bounded edge partitioning")
@@ -56,6 +61,14 @@ def main() -> None:
     args = ap.parse_args()
     if args.max_wedge_chunk is not None and args.max_wedge_chunk < 1:
         ap.error("--max-wedge-chunk must be a positive number of wedge slots")
+    if args.distributed:
+        if args.method not in (None, "auto", "distributed"):
+            ap.error(f"--distributed conflicts with --method {args.method}; "
+                     "drop one of the two (--distributed runs the §III-E "
+                     "striped schedule over all local devices)")
+        args.method = "distributed"
+    elif args.method is None:
+        args.method = "auto"
 
     t0 = time.time()
     edges = build_graph(args)
@@ -77,21 +90,6 @@ def main() -> None:
     es = tc.last_stats
     print(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
           f"{es.n_chunks} chunk(s), peak wedge buffer {es.peak_wedge_buffer})")
-
-    if args.distributed and args.method != "distributed":
-        # cross-check the main schedule against the §III-E striping
-        # (pointless when the main count already ran distributed)
-        import jax
-        from repro.launch.mesh import make_local_mesh
-
-        mesh = make_local_mesh()
-        tcd = TriangleCounter(method="distributed", mesh=mesh,
-                              max_wedge_chunk=args.max_wedge_chunk)
-        t0 = time.time()
-        td = tcd.count(edges)
-        print(f"triangles[distributed x{len(jax.devices())}] = {td} "
-              f"({(time.time()-t0)*1e3:.1f} ms; {tcd.last_stats.n_chunks} chunk(s))")
-        assert td == t
 
     if args.baseline:
         t0 = time.time()

@@ -1,0 +1,168 @@
+"""Graph-query service over an edge stream — the ROADMAP serving workload.
+
+Drives :class:`repro.core.IncrementalTriangleCounter` with a request loop
+that interleaves update batches (from ``repro.graphs.streams``) with
+count / per-node / clustering / transitivity queries, and reports p50/p99
+latency for both traffic classes::
+
+    python -m repro.launch.serve_graph --generator kronecker --scale 10
+    python -m repro.launch.serve_graph --scale 10 --stream sliding_window \\
+        --window 20000 --batch-size 512 --queries-per-batch 8
+    python -m repro.launch.serve_graph --scale 12 --max-wedge-chunk 1048576
+
+Updates run the batched delta-counting path (only triangles touched by
+the batch are recounted); queries read the maintained state, so they are
+microseconds regardless of graph size.  Unless ``--no-verify`` is given,
+the final maintained count is checked against a from-scratch
+``TriangleCounter(method="auto")`` recount of the live edge set and the
+process exits non-zero on any mismatch — a speedup from a wrong count is
+worthless.  Under overload, exact incremental updates can be traded for
+DOULION sparsified recounts (``repro.core.approx``); this loop serves
+the exact path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import IncrementalTriangleCounter, TriangleCounter
+from repro.graphs import GRAPH_GENERATORS, STREAM_GENERATORS, graph_stats
+from repro.launch.count import build_graph
+
+QUERY_KINDS = ("count", "per_node", "clustering", "transitivity")
+
+
+def _pct(lat_s, q):
+    return float(np.percentile(np.asarray(lat_s) * 1e3, q)) if lat_s else 0.0
+
+
+def run_service(
+    stream,
+    *,
+    n_nodes: int,
+    max_batches: int | None = None,
+    queries_per_batch: int = 4,
+    max_wedge_chunk: int | None = None,
+):
+    """Apply ``stream`` batches interleaved with queries; return a report."""
+    counter = IncrementalTriangleCounter(
+        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk
+    )
+    update_lat, query_lat = [], []
+    n_batches = n_inserted = n_deleted = 0
+    qi = 0
+    for batch in stream:
+        if max_batches is not None and n_batches >= max_batches:
+            break
+        t0 = time.perf_counter()
+        counter.apply(insert=batch.insert, delete=batch.delete)
+        update_lat.append(time.perf_counter() - t0)
+        n_batches += 1
+        n_inserted += batch.insert.shape[0]
+        n_deleted += batch.delete.shape[0]
+        for _ in range(queries_per_batch):
+            kind = QUERY_KINDS[qi % len(QUERY_KINDS)]
+            qi += 1
+            t0 = time.perf_counter()
+            if kind == "count":
+                _ = counter.count
+            elif kind == "per_node":
+                _ = counter.per_node()
+            elif kind == "clustering":
+                _ = counter.clustering()
+            else:
+                _ = counter.transitivity()
+            query_lat.append(time.perf_counter() - t0)
+    return counter, dict(
+        n_batches=n_batches,
+        n_inserted=n_inserted,
+        n_deleted=n_deleted,
+        n_queries=len(query_lat),
+        update_p50_ms=_pct(update_lat, 50),
+        update_p99_ms=_pct(update_lat, 99),
+        query_p50_ms=_pct(query_lat, 50),
+        query_p99_ms=_pct(query_lat, 99),
+        updates_per_s=(n_inserted + n_deleted) / max(sum(update_lat), 1e-12),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--generator", choices=sorted(GRAPH_GENERATORS), default="kronecker")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--m", type=int, default=1_000_000)
+    ap.add_argument("--m-attach", type=int, default=8)
+    ap.add_argument("--k", type=int, default=50)
+    ap.add_argument("--beta", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", choices=sorted(STREAM_GENERATORS), default="temporal")
+    ap.add_argument("--window", type=int, default=None,
+                    help="live-edge window for sliding_window (default: half "
+                         "the graph's undirected edges)")
+    ap.add_argument("--batch-size", type=int, default=512)
+    ap.add_argument("--max-batches", type=int, default=None,
+                    help="stop after this many update batches (default: drain)")
+    ap.add_argument("--queries-per-batch", type=int, default=4)
+    ap.add_argument("--max-wedge-chunk", type=int, default=None,
+                    help="wedge-buffer budget per launch, applied to every "
+                         "update batch's probe workload")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the final from-scratch oracle recount")
+    args = ap.parse_args()
+    if args.window is not None and args.window < 1:
+        ap.error("--window must be a positive number of live edges")
+    if args.batch_size < 1:
+        ap.error("--batch-size must be positive")
+
+    t0 = time.time()
+    edges = build_graph(args)
+    stats = graph_stats(edges)
+    print(f"graph: {stats['n_nodes']} nodes, {stats['n_edges']} edges, "
+          f"max deg {stats['max_degree']} (built in {time.time()-t0:.2f}s)")
+
+    if args.stream == "sliding_window":
+        window = (args.window if args.window is not None
+                  else max(stats["n_edges"] // 2, 1))
+        stream = STREAM_GENERATORS[args.stream](
+            edges, window=window, batch_size=args.batch_size, seed=args.seed
+        )
+        print(f"stream: sliding_window(window={window}, batch={args.batch_size})")
+    else:
+        stream = STREAM_GENERATORS[args.stream](
+            edges, batch_size=args.batch_size, seed=args.seed
+        )
+        print(f"stream: temporal(batch={args.batch_size})")
+
+    counter, rep = run_service(
+        stream,
+        n_nodes=stats["n_nodes"],
+        max_batches=args.max_batches,
+        queries_per_batch=args.queries_per_batch,
+        max_wedge_chunk=args.max_wedge_chunk,
+    )
+    print(f"served {rep['n_batches']} update batches "
+          f"(+{rep['n_inserted']}/-{rep['n_deleted']} edges, "
+          f"{rep['updates_per_s']:.0f} edge-updates/s) "
+          f"and {rep['n_queries']} queries")
+    print(f"update latency: p50 {rep['update_p50_ms']:.2f} ms, "
+          f"p99 {rep['update_p99_ms']:.2f} ms")
+    print(f"query  latency: p50 {rep['query_p50_ms']:.3f} ms, "
+          f"p99 {rep['query_p99_ms']:.3f} ms")
+    print(f"live graph: {counter.n_edges} edges, T = {counter.count}")
+
+    if not args.no_verify:
+        tc = TriangleCounter(method="auto", max_wedge_chunk=args.max_wedge_chunk)
+        expect = tc.count(counter.current_edges(), n_nodes=counter.n_nodes)
+        if counter.count != expect:
+            raise SystemExit(
+                f"VERIFY FAILED: incremental T={counter.count} != oracle {expect}"
+            )
+        print(f"verify: from-scratch recount agrees (T = {expect})")
+
+
+if __name__ == "__main__":
+    main()

@@ -119,7 +119,26 @@ def test_forward_orientation_invariants(small_graphs):
 
 def test_doulion_p1_exact(small_graphs):
     e = small_graphs["er"]
-    assert count_triangles_doulion(e, p=1.0) == count_triangles(e)
+    t = count_triangles_doulion(e, p=1.0)
+    assert t == count_triangles(e)
+    # p=1 keeps every edge: the result is the exact count, as an int
+    assert isinstance(t, int)
+
+
+def test_doulion_routes_through_engine(small_graphs):
+    """The approximate path must reach auto dispatch and the memory
+    budget, not bypass the engine with a hardcoded schedule."""
+    e = small_graphs["kron"]
+    exact = count_triangles(e)
+    assert count_triangles_doulion(e, p=1.0, method="auto") == exact
+    # chunked and unchunked sparsified counts agree (same seed → same sample)
+    a = count_triangles_doulion(e, p=0.5, seed=3)
+    b = count_triangles_doulion(e, p=0.5, seed=3, max_wedge_chunk=512)
+    assert a == b
+    assert isinstance(a, float)
+    # every engine schedule is reachable from the approximate path
+    for method in METHODS:
+        assert count_triangles_doulion(e, p=1.0, method=method) == exact
 
 
 def test_doulion_estimates(small_graphs):

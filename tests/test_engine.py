@@ -225,6 +225,53 @@ def test_auto_dispatch_stats():
     )
 
 
+def test_per_node_records_resolved_vs_executed(family_graphs):
+    """per_node always executes the wedge schedule; the stats must say so
+    honestly instead of hiding a silent fallback."""
+    e = family_graphs["kron10"]
+    for configured in ["panel", "pallas"]:
+        tc = TriangleCounter(method=configured)
+        tc.per_node(e)
+        assert tc.last_stats.method == "wedge_bsearch", configured
+        assert tc.last_stats.resolved_method == configured
+    # auto dispatch: resolved is whatever choose_method picked, never "auto"
+    tc = TriangleCounter(method="auto")
+    tc.per_node(e)
+    assert tc.last_stats.resolved_method in METHODS[1:]
+    # count paths execute what they resolve
+    tc2 = TriangleCounter(method="panel")
+    tc2.count(e)
+    assert tc2.last_stats.method == tc2.last_stats.resolved_method == "panel"
+
+
+def test_peak_buffer_is_true_chunk_load(family_graphs):
+    """peak_wedge_buffer reports the largest buffer actually materialized
+    (the max chunk load), not the requested budget."""
+    e = family_graphs["kron10"]
+    base = TriangleCounter(method="wedge_bsearch")
+    expect = base.count(e)
+    total = base.last_stats.total_wedges
+    # unchunked: the whole workload is the buffer
+    assert base.last_stats.peak_wedge_buffer == total
+    budget = total // 3
+    tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
+    assert tc.count(e) == expect
+    st = tc.last_stats
+    # the greedy plan rarely fills the budget exactly: the true peak is
+    # what the kernels saw, and it must match the plan's chunk loads
+    import jax.numpy as jnp
+
+    from repro.core import preprocess
+
+    csr = preprocess(jnp.asarray(e), n_nodes=int(e.max()) + 1)
+    out_deg = np.asarray(csr.out_degree)
+    reps = out_deg[np.asarray(csr.src)].astype(np.int64)
+    bounds, _ = plan_edge_chunks(reps, budget)
+    true_peak = max(int(reps[s:t].sum()) for s, t in bounds)
+    assert st.peak_wedge_buffer == true_peak
+    assert st.peak_wedge_buffer <= budget
+
+
 def test_engine_rejects_bad_args():
     with pytest.raises(ValueError):
         TriangleCounter(method="nope")
