@@ -1,0 +1,98 @@
+"""Ingestion throughput: parse / canonicalize / cache at bounded memory.
+
+Emits edges/s for each stage of the out-of-core pipeline on a
+Kronecker-13 graph written to disk as a SNAP-style text file, across
+several ``max_chunk_edges`` budgets (full, 1/8, 1/32 of the raw edge
+list), plus the ``.tricsr`` cache write / mmap-load times and a
+cache-loaded count as the exactness gate.  Paste results into
+EXPERIMENTS.md §Ingestion.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import TriangleCounter
+from repro.graphs import kronecker_rmat
+from repro.graphs.io import (
+    ExternalSortStats,
+    canonicalize_edges_external,
+    ingest,
+    iter_edge_chunks,
+    load_tricsr,
+    save_tricsr,
+)
+from repro.graphs.io.ingest import csr_from_edge_array
+
+from .common import timeit
+
+SCALE = 13
+
+
+def run():
+    rows = []
+    edges = kronecker_rmat(SCALE, edge_factor=16, seed=0)
+    one_dir = edges[edges[:, 0] < edges[:, 1]]
+    raw_edges = one_dir.shape[0]
+
+    with tempfile.TemporaryDirectory(prefix="bench-ingest-") as tmp:
+        src = os.path.join(tmp, f"kron{SCALE}.txt")
+        np.savetxt(src, one_dir, fmt="%d", delimiter="\t")
+
+        # stage 1: parse only (drain the chunk stream), per budget
+        budgets = [raw_edges, max(raw_edges // 8, 1), max(raw_edges // 32, 1)]
+        for b in budgets:
+            us = timeit(lambda: sum(c.shape[0] for c in iter_edge_chunks(src, b)))
+            rows.append((f"ingest/parse/chunk={b}", us,
+                         f"{raw_edges / (us / 1e6):.0f} edges/s"))
+
+        # stage 2: parse + external canonicalization, per budget
+        for b in budgets:
+            def full(b=b, stats=None):
+                return canonicalize_edges_external(
+                    iter_edge_chunks(src, b), max_chunk_edges=b, stats_out=stats
+                )
+
+            us = timeit(full)
+            stats = ExternalSortStats()
+            canonical = full(stats=stats)
+            assert np.array_equal(canonical, edges), "external != in-memory"
+            rows.append((f"ingest/canonicalize/chunk={b}", us,
+                         f"{raw_edges / (us / 1e6):.0f} edges/s | "
+                         f"{stats.spill_runs} spill runs"))
+
+        # stage 3: .tricsr write + mmap load
+        csr = csr_from_edge_array(edges)
+        path = os.path.join(tmp, "g.tricsr")
+        us = timeit(lambda: save_tricsr(path, csr))
+        rows.append(("ingest/tricsr-write", us,
+                     f"{csr.n_edges / (us / 1e6):.0f} edges/s"))
+        us = timeit(lambda: load_tricsr(path, mmap=True))
+        rows.append(("ingest/tricsr-load-mmap", us,
+                     f"{csr.n_edges / (us / 1e6):.0f} edges/s"))
+
+        # stage 4: end-to-end — cold ingest vs warm (cache-hit) ingest,
+        # then a count straight off the memory-mapped CSR
+        cache = os.path.join(tmp, "cache")
+        cold, s_cold = ingest(src, cache_dir=cache)
+        rows.append(("ingest/end-to-end-cold",
+                     (s_cold.parse_s + s_cold.csr_build_s + s_cold.cache_write_s) * 1e6,
+                     f"{raw_edges / max(s_cold.parse_s + s_cold.csr_build_s, 1e-9):.0f} edges/s"))
+
+        def warm():
+            csr_w, s = ingest(src, cache_dir=cache)
+            assert s.cache_hit
+            return csr_w
+
+        us = timeit(warm)
+        rows.append(("ingest/end-to-end-warm", us, "cache hit"))
+
+        tc = TriangleCounter(method="wedge_bsearch")
+        t_mem = tc.count(edges)
+        warm_csr = warm()
+        us = timeit(lambda: tc.count(warm_csr))
+        assert tc.count(warm_csr) == t_mem, "cached count != in-memory count"
+        rows.append(("ingest/count-from-cache", us, f"T={t_mem}"))
+    return rows

@@ -9,6 +9,7 @@ from . import (
     ablations,
     engine_chunking,
     fig1_scaling,
+    ingest,
     kernel_micro,
     multidevice,
     section5_approx,
@@ -28,6 +29,7 @@ SUITES = {
     "kernels": kernel_micro.run,       # Pallas kernel micro-sweeps
     "chunking": engine_chunking.run,   # engine — memory-bounded partitioning
     "streaming": streaming.run,        # incremental updates vs full recount
+    "ingest": ingest.run,              # out-of-core parse/canonicalize/cache
 }
 
 

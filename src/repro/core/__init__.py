@@ -19,7 +19,13 @@ schedules — ``wedge_bsearch``, ``panel``, ``pallas``, ``distributed`` —
 behind one API with memory-bounded edge partitioning; the per-schedule
 primitives live in :mod:`repro.core.count` / :mod:`repro.core.distributed`.
 """
-from .preprocess import OrientedCSR, preprocess, preprocess_host_offload, degrees
+from .preprocess import (
+    OrientedCSR,
+    preprocess,
+    preprocess_host_offload,
+    oriented_from_undirected_csr,
+    degrees,
+)
 from .engine import (
     TriangleCounter,
     EngineStats,
@@ -68,6 +74,7 @@ __all__ = [
     "OrientedCSR",
     "preprocess",
     "preprocess_host_offload",
+    "oriented_from_undirected_csr",
     "degrees",
     "WedgePlan",
     "make_wedge_plan",

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.graphs.formats import validate_node_ids
+
 __all__ = ["count_triangles_doulion"]
 
 
@@ -40,6 +42,7 @@ def count_triangles_doulion(
     edges = np.asarray(edges)
     if edges.size == 0:
         return 0 if p == 1.0 else 0.0
+    validate_node_ids(edges)  # wrapped packed keys / int32 casts corrupt silently
     tc = TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk)
     n_nodes = int(edges.max()) + 1
     if p == 1.0:  # no sparsification — exact count, exact type

@@ -79,7 +79,7 @@ from .count import (
     panel_intersect_count,
     segmented_int32_sum,
 )
-from .preprocess import OrientedCSR, preprocess
+from .preprocess import OrientedCSR, oriented_from_undirected_csr, preprocess
 
 __all__ = [
     "TriangleCounter",
@@ -296,7 +296,14 @@ class TriangleCounter:
     # -- public API ---------------------------------------------------------
 
     def count(self, edges, n_nodes: int | None = None) -> int:
-        """Exact global triangle count of a canonical edge array."""
+        """Exact global triangle count.
+
+        ``edges`` may be a canonical edge array, a pre-built
+        :class:`OrientedCSR` (preprocessing skipped entirely), or a cached
+        undirected CSR (anything with ``row_offsets``/``col``/``n_nodes``,
+        e.g. ``repro.graphs.io.CSRGraph`` loaded from a ``.tricsr`` file —
+        oriented by a host-side filter, never re-canonicalized).
+        """
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             return 0
@@ -320,52 +327,76 @@ class TriangleCounter:
         """
         csr = self._prepare(edges, n_nodes)
         if csr is None:
-            n = n_nodes or 0
+            n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
             return np.zeros((n,), np.int64)
         return self._per_node_wedge(csr, resolved=self._resolve(csr))
+
+    @staticmethod
+    def _degree_hist(edges, n_nodes: int | None):
+        """Undirected degrees + node count for any accepted input kind."""
+        if isinstance(edges, OrientedCSR):
+            return np.asarray(edges.degree, dtype=np.int64), edges.n_nodes
+        if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
+            return np.diff(np.asarray(edges.row_offsets)).astype(np.int64), int(
+                getattr(edges, "n_nodes", np.asarray(edges.row_offsets).shape[0] - 1)
+            )
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            return np.zeros((n_nodes or 0,), np.int64), n_nodes or 0
+        if n_nodes is None:
+            n_nodes = int(edges.max()) + 1
+        return np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64), n_nodes
 
     def clustering(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Local clustering coefficients c(v) = 2·T(v) / (deg(v)·(deg(v)−1))."""
         from .clustering import clustering_from_counts
 
-        edges = np.asarray(edges)
-        if edges.size == 0:
-            return np.zeros((n_nodes or 0,), np.float64)
-        if n_nodes is None:
-            n_nodes = int(edges.max()) + 1
+        deg, n_nodes = self._degree_hist(edges, n_nodes)
+        if deg.size == 0:
+            return np.zeros((n_nodes,), np.float64)
         tri = self.per_node(edges, n_nodes)
-        deg = np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64)
         return clustering_from_counts(tri, deg)
 
     def transitivity(self, edges, n_nodes: int | None = None) -> float:
         """Global transitivity ratio 3·#triangles / #wedges."""
         from .clustering import transitivity_from_counts
 
-        edges = np.asarray(edges)
-        if edges.size == 0:
+        deg, n_nodes = self._degree_hist(edges, n_nodes)
+        if deg.size == 0:
             return 0.0
-        if n_nodes is None:
-            n_nodes = int(edges.max()) + 1
         t = self.count(edges, n_nodes)
-        deg = np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64)
         return transitivity_from_counts(t, deg)
 
     # -- shared plumbing ----------------------------------------------------
 
     def _prepare(self, edges, n_nodes: int | None) -> OrientedCSR | None:
-        edges = np.asarray(edges)
-        if edges.size == 0:
-            # no CSR to resolve "auto" against; record the trivial schedule
-            resolved = self.method if self.method != "auto" else "wedge_bsearch"
-            self.last_stats = EngineStats(
-                method=resolved, resolved_method=resolved, n_chunks=0,
-                peak_wedge_buffer=0, wedge_budget=self.max_wedge_chunk,
-                total_wedges=0, n_directed_edges=0,
+        if isinstance(edges, OrientedCSR):
+            csr = edges
+        elif hasattr(edges, "row_offsets") and hasattr(edges, "col"):
+            # cached undirected CSR (repro.graphs.io.CSRGraph or
+            # duck-typed equivalent): orient host-side, skip the sort
+            csr = oriented_from_undirected_csr(
+                edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)
             )
-            return None
-        if n_nodes is None:
-            n_nodes = int(edges.max()) + 1
-        return preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+        else:
+            edges = np.asarray(edges)
+            if edges.size == 0:
+                csr = None
+            else:
+                if n_nodes is None:
+                    n_nodes = int(edges.max()) + 1
+                csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+        if csr is not None and csr.n_directed_edges > 0:
+            return csr
+        # empty graph: no CSR to resolve "auto" against; record the
+        # trivial schedule
+        resolved = self.method if self.method != "auto" else "wedge_bsearch"
+        self.last_stats = EngineStats(
+            method=resolved, resolved_method=resolved, n_chunks=0,
+            peak_wedge_buffer=0, wedge_budget=self.max_wedge_chunk,
+            total_wedges=0, n_directed_edges=0,
+        )
+        return None
 
     def _resolve(self, csr: OrientedCSR) -> str:
         if self.method != "auto":

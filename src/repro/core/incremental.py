@@ -68,6 +68,7 @@ from .engine import (
     _chunk_per_node_kernel,
     plan_edge_chunks,
 )
+from repro.graphs.formats import validate_node_ids
 
 __all__ = ["IncrementalTriangleCounter", "UpdateStats"]
 
@@ -283,8 +284,7 @@ class IncrementalTriangleCounter:
     def _normalize_batch(edges) -> np.ndarray:
         """Unique undirected (lo, hi) pairs; self loops and dups dropped."""
         edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
-        if (edges < 0).any():
-            raise ValueError("vertex ids must be non-negative")
+        validate_node_ids(edges)  # packed-key adjacency wraps outside [0, 2**31)
         edges = edges[edges[:, 0] != edges[:, 1]]
         if edges.shape[0] == 0:
             return np.empty((0, 2), np.int64)

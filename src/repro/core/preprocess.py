@@ -33,7 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["OrientedCSR", "preprocess", "preprocess_host_offload", "degrees"]
+__all__ = [
+    "OrientedCSR",
+    "preprocess",
+    "preprocess_host_offload",
+    "oriented_from_undirected_csr",
+    "degrees",
+]
 
 
 class OrientedCSR(NamedTuple):
@@ -95,6 +101,34 @@ def preprocess(edges: jax.Array, n_nodes: int) -> OrientedCSR:
     return OrientedCSR(row_offsets, src, col, out_degree, deg)
 
 
+def oriented_from_undirected_csr(row_offsets, col, n_nodes: int | None = None) -> OrientedCSR:
+    """Forward-orient a canonical *undirected* CSR without re-sorting.
+
+    This is the ingestion fast path: a cached ``.tricsr`` CSR
+    (:class:`repro.graphs.io.CSRGraph`) is already sorted by (src, dst),
+    and forward orientation is order-preserving, so the oriented CSR is a
+    single boolean filter — no lexsort, no edge-array materialization, no
+    re-canonicalization.  Output is bit-identical to
+    ``preprocess(csr_to_edge_array(row_offsets, col))``.
+    """
+    row_offsets = np.asarray(row_offsets)
+    col = np.asarray(col)
+    if n_nodes is None:
+        n_nodes = row_offsets.shape[0] - 1
+    deg = np.diff(row_offsets).astype(np.int32)
+    u = np.repeat(np.arange(n_nodes, dtype=np.int32), deg)
+    v = col.astype(np.int32, copy=False)
+    du, dv = deg[u], deg[v]
+    keep = (du < dv) | ((du == dv) & (u < v))
+    src = np.ascontiguousarray(u[keep])
+    out_col = np.ascontiguousarray(v[keep])
+    out_row = np.searchsorted(src, np.arange(n_nodes + 1, dtype=np.int32)).astype(
+        np.int32
+    )
+    out_degree = out_row[1:] - out_row[:-1]
+    return OrientedCSR(out_row, src, out_col, out_degree, deg)
+
+
 def preprocess_host_offload(edges: np.ndarray, n_nodes: int | None = None) -> OrientedCSR:
     """Host-side degree + orientation, device-side sort (paper §III-D6).
 
@@ -102,7 +136,18 @@ def preprocess_host_offload(edges: np.ndarray, n_nodes: int | None = None) -> Or
     device, the paper computes degrees and drops backward edges on the CPU,
     halving what must be transferred; the sort and node-array build then
     run on the accelerator.  Identical output to :func:`preprocess`.
+
+    Accepts either a canonical edge array or a pre-built undirected CSR
+    (anything with ``row_offsets``/``col``/``n_nodes`` attributes, e.g. a
+    cached :class:`repro.graphs.io.CSRGraph`) — the CSR path skips the
+    device sort entirely via :func:`oriented_from_undirected_csr`.
     """
+    if isinstance(edges, OrientedCSR):
+        return edges  # already oriented — re-filtering would drop edges
+    if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
+        return oriented_from_undirected_csr(
+            edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)
+        )
     edges = np.asarray(edges)
     if n_nodes is None:
         n_nodes = int(edges.max()) + 1 if edges.size else 0

@@ -1,0 +1,69 @@
+"""Out-of-core graph ingestion: parsers, external canonicalization, CSR cache.
+
+The paper's evaluation graphs (Table I) are on-disk SNAP edge lists far
+larger than the raw-edge working set :func:`repro.graphs.canonicalize_edges`
+assumes fits in RAM.  This package provides the bounded-memory path from a
+file to the engine:
+
+``parsers``
+    Chunked streaming parsers for SNAP-style text edge lists (comments,
+    whitespace/tab separators, optional gzip) and MatrixMarket coordinate
+    files.  Peak host memory is bounded by ``max_chunk_edges``.
+``external``
+    External-memory canonicalization: per-chunk packed-key dedup (the
+    §III-D2 64-bit sort trick), sorted runs spilled to disk, k-way merge
+    back into the canonical edge array.
+``cache``
+    The versioned ``.tricsr`` binary CSR cache — parse/canonicalize once,
+    memory-map on every later load.
+``registry``
+    Named datasets (the paper's Table I graphs) with URLs, checksums and
+    deterministic Kronecker/R-MAT fallbacks of matching scale for offline
+    CI.
+``ingest``
+    The orchestrator tying the above together behind one call.
+"""
+from .parsers import (
+    iter_edge_chunks,
+    parse_edge_file,
+    sniff_format,
+    DEFAULT_CHUNK_EDGES,
+)
+from .external import canonicalize_edges_external, ExternalSortStats
+from .cache import (
+    CSRGraph,
+    save_tricsr,
+    load_tricsr,
+    TRICSR_MAGIC,
+    TRICSR_VERSION,
+    CacheError,
+)
+from .ingest import ingest, cache_path_for, IngestStats
+from .registry import (
+    Dataset,
+    DATASETS,
+    get_dataset,
+    materialize_dataset,
+)
+
+__all__ = [
+    "iter_edge_chunks",
+    "parse_edge_file",
+    "sniff_format",
+    "DEFAULT_CHUNK_EDGES",
+    "canonicalize_edges_external",
+    "ExternalSortStats",
+    "CSRGraph",
+    "save_tricsr",
+    "load_tricsr",
+    "TRICSR_MAGIC",
+    "TRICSR_VERSION",
+    "CacheError",
+    "ingest",
+    "cache_path_for",
+    "IngestStats",
+    "Dataset",
+    "DATASETS",
+    "get_dataset",
+    "materialize_dataset",
+]

@@ -1,0 +1,163 @@
+"""The ``.tricsr`` binary CSR cache format.
+
+A graph is parsed and canonicalized once; every later run memory-maps the
+cached CSR and is counting within milliseconds.  Layout (little-endian)::
+
+    offset  size  field
+    0       8     magic  b"TRICSR\\x01\\n"   (version byte inside the magic)
+    8       8     n_nodes               (u64)
+    16      8     n_rows = len(col)     (u64; 2 × undirected edge count)
+    24      1     row_offsets dtype code (np.dtype(...).num, u8)
+    25      1     col dtype code         (u8)
+    26      6     reserved (zeros)
+    32      8     crc32 of the two payloads (u64, low 32 bits used)
+    40      24    reserved (zeros)  — header is a fixed 64 bytes
+    64      …     row_offsets payload ((n_nodes+1) × itemsize)
+    …       …     col payload          (n_rows × itemsize)
+
+The stored CSR is the **undirected canonical** adjacency (every edge in
+both directions, rows sorted): exactly ``edge_array_to_csr`` of the
+canonical edge array, so tests can compare bit-for-bit.  Loads default to
+``mmap_mode="r"`` and skip the checksum (header + size validation only);
+pass ``verify=True`` to pay one full read for the crc — ingest does this
+once, right after writing.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = [
+    "TRICSR_MAGIC",
+    "TRICSR_VERSION",
+    "CacheError",
+    "CSRGraph",
+    "save_tricsr",
+    "load_tricsr",
+]
+
+TRICSR_VERSION = 1
+TRICSR_MAGIC = b"TRICSR" + bytes([TRICSR_VERSION]) + b"\n"
+_HEADER = struct.Struct("<8sQQBB6xQ24x")
+assert _HEADER.size == 64
+
+
+class CacheError(ValueError):
+    """A ``.tricsr`` file is missing, truncated, corrupt, or wrong-version."""
+
+
+_DTYPE_BY_CODE = {
+    np.dtype(t).num: np.dtype(t)
+    for t in (np.int32, np.int64, np.uint32, np.uint64)
+}
+
+
+class CSRGraph(NamedTuple):
+    """Undirected canonical CSR as loaded from (or destined for) the cache.
+
+    ``row_offsets[u] : row_offsets[u+1]`` indexes ``col`` — the sorted
+    neighbors of ``u`` with every undirected edge present in both rows,
+    i.e. ``edge_array_to_csr(canonicalize_edges(raw))``.  Arrays may be
+    read-only memory maps.
+    """
+
+    row_offsets: np.ndarray  # (n_nodes+1,) int64
+    col: np.ndarray          # (2m,) int32
+    n_nodes: int
+
+    @property
+    def n_edges(self) -> int:
+        """Undirected edge count."""
+        return int(self.col.shape[0]) // 2
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_offsets).astype(np.int64)
+
+    def edge_array(self) -> np.ndarray:
+        """Materialize the canonical edge array in CSR (src-major) order."""
+        from ..formats import csr_to_edge_array
+
+        return csr_to_edge_array(np.asarray(self.row_offsets), np.asarray(self.col))
+
+    def stats(self) -> dict:
+        """Degree statistics without materializing the edge array
+        (same dict as :func:`repro.graphs.graph_stats`)."""
+        from ..formats import stats_from_degrees
+
+        return stats_from_degrees(self.degrees(), self.n_nodes)
+
+
+def save_tricsr(path: str | os.PathLike, csr: CSRGraph) -> None:
+    """Atomically write ``csr`` to ``path`` (tmp file + rename)."""
+    row = np.ascontiguousarray(csr.row_offsets, dtype=np.int64)
+    col = np.ascontiguousarray(csr.col, dtype=np.int32)
+    if row.shape[0] != csr.n_nodes + 1:
+        raise ValueError(
+            f"row_offsets has {row.shape[0]} entries for n_nodes={csr.n_nodes}"
+        )
+    crc = zlib.crc32(col.tobytes(), zlib.crc32(row.tobytes()))
+    header = _HEADER.pack(
+        TRICSR_MAGIC, csr.n_nodes, col.shape[0],
+        row.dtype.num, col.dtype.num, crc,
+    )
+    tmp = os.fspath(path) + ".tmp"
+    with open(tmp, "wb") as fh:
+        fh.write(header)
+        fh.write(row.tobytes())
+        fh.write(col.tobytes())
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def load_tricsr(
+    path: str | os.PathLike, *, mmap: bool = True, verify: bool = False
+) -> CSRGraph:
+    """Load a ``.tricsr`` file, memory-mapped unless ``mmap=False``."""
+    try:
+        with open(path, "rb") as fh:
+            raw = fh.read(_HEADER.size)
+    except OSError as e:
+        raise CacheError(f"cannot read {path}: {e}") from e
+    if len(raw) < _HEADER.size:
+        raise CacheError(f"{path}: truncated header ({len(raw)} bytes)")
+    magic, n_nodes, n_rows, row_code, col_code, crc = _HEADER.unpack(raw)
+    if magic[:6] != TRICSR_MAGIC[:6]:
+        raise CacheError(f"{path}: not a .tricsr file (bad magic {magic!r})")
+    if magic != TRICSR_MAGIC:
+        raise CacheError(
+            f"{path}: version {magic[6]} != supported {TRICSR_VERSION}; "
+            "re-ingest to refresh the cache"
+        )
+    try:
+        row_dtype = _DTYPE_BY_CODE[row_code]
+        col_dtype = _DTYPE_BY_CODE[col_code]
+    except KeyError as e:
+        raise CacheError(f"{path}: unsupported dtype code {e.args[0]}") from None
+    row_bytes = (n_nodes + 1) * row_dtype.itemsize
+    col_bytes = n_rows * col_dtype.itemsize
+    expect = _HEADER.size + row_bytes + col_bytes
+    actual = os.path.getsize(path)
+    if actual != expect:
+        raise CacheError(f"{path}: size {actual} != header-implied {expect}")
+    if mmap:
+        row = np.memmap(path, dtype=row_dtype, mode="r",
+                        offset=_HEADER.size, shape=(n_nodes + 1,))
+        col = np.memmap(path, dtype=col_dtype, mode="r",
+                        offset=_HEADER.size + row_bytes, shape=(n_rows,))
+    else:
+        with open(path, "rb") as fh:
+            fh.seek(_HEADER.size)
+            row = np.frombuffer(fh.read(row_bytes), dtype=row_dtype)
+            col = np.frombuffer(fh.read(col_bytes), dtype=col_dtype)
+    if verify:
+        got = zlib.crc32(np.asarray(col).tobytes(),
+                         zlib.crc32(np.asarray(row).tobytes()))
+        if got != crc:
+            raise CacheError(f"{path}: checksum mismatch (stored {crc:#x}, "
+                             f"computed {got:#x}) — cache is corrupt, delete it")
+    return CSRGraph(row, col, int(n_nodes))

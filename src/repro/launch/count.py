@@ -5,20 +5,31 @@
     python -m repro.launch.count --generator kronecker --scale 14
     python -m repro.launch.count --generator kronecker --scale 14 --method panel
     python -m repro.launch.count --generator watts_strogatz --n 100000 --k 50
-    python -m repro.launch.count --generator barabasi_albert --n 20000 --baseline
     python -m repro.launch.count --scale 14 --max-wedge-chunk 1048576
     python -m repro.launch.count --scale 12 --distributed   # §III-E striping
+
+    # on-disk graphs: parsed/canonicalized once, .tricsr-cached after
+    python -m repro.launch.count --input tests/data/karate.txt --json
+    python -m repro.launch.count --input soc-LiveJournal1.txt.gz \\
+        --cache-dir ~/.cache/tricsr --max-chunk-edges 4194304
+    python -m repro.launch.count --dataset karate --json
+    python -m repro.launch.count --dataset com-orkut --download
 
 All counting routes through :class:`repro.core.TriangleCounter` with
 ``auto`` dispatch as the front door (override with ``--method``);
 ``--max-wedge-chunk`` bounds the device wedge buffer (memory-bounded edge
-partitioning) and the chunk/launch stats are printed after each run.
-``--distributed`` routes the count through the striped multi-device
-schedule and refuses to combine with a conflicting explicit ``--method``.
+partitioning) and ``--max-chunk-edges`` bounds host memory during
+parsing/canonicalization.  ``--json`` prints one machine-readable object
+on stdout (count, schedule, engine stats, ingest provenance, timings) and
+moves the human-readable progress lines to stderr — benchmarks and CI
+smokes should consume that instead of scraping text.
 """
 from __future__ import annotations
 
 import argparse
+import functools
+import json
+import sys
 import time
 
 import numpy as np
@@ -26,6 +37,7 @@ import numpy as np
 from repro.core import TriangleCounter, count_triangles_numpy
 from repro.core.engine import METHODS
 from repro.graphs import GRAPH_GENERATORS, graph_stats
+from repro.graphs.io import DATASETS, ingest, materialize_dataset
 
 
 def build_graph(args) -> np.ndarray:
@@ -39,8 +51,28 @@ def build_graph(args) -> np.ndarray:
     return gen(args.n, args.m, seed=args.seed)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def add_source_arguments(ap: argparse.ArgumentParser) -> None:
+    """Graph-source flags shared by count.py and serve_graph.py."""
+    ap.add_argument("--input", default=None, metavar="FILE",
+                    help="on-disk edge list (SNAP text / MatrixMarket, "
+                         "optionally .gz) ingested via the out-of-core path")
+    ap.add_argument("--dataset", default=None, choices=sorted(DATASETS),
+                    help="named dataset from the registry (paper Table I "
+                         "graphs); offline falls back to a deterministic "
+                         "generator of matching scale")
+    ap.add_argument("--cache-dir", default=".tricsr-cache",
+                    help="directory for .tricsr binary CSR caches and "
+                         "downloaded/generated dataset sources "
+                         "(default: %(default)s)")
+    ap.add_argument("--max-chunk-edges", type=int, default=None,
+                    help="host-memory bound for parsing/canonicalization, "
+                         "in raw edges per chunk (default: 4M)")
+    ap.add_argument("--download", action="store_true",
+                    help="allow fetching --dataset sources from the network "
+                         "(also enabled by REPRO_ALLOW_DOWNLOAD=1)")
+    ap.add_argument("--fallback-scale", type=int, default=None,
+                    help="shrink a dataset's Kronecker fallback to this "
+                         "scale (offline CI sizing)")
     ap.add_argument("--generator", choices=sorted(GRAPH_GENERATORS), default="kronecker")
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--edge-factor", type=int, default=16)
@@ -50,6 +82,73 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--beta", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
+
+
+def resolve_graph(args, log=print):
+    """Resolve the CLI's graph source to ``(graph, source_info)``.
+
+    ``graph`` is a canonical edge array (generators) or a cached/ingested
+    ``CSRGraph`` (``--input`` / ``--dataset``) — both are accepted
+    directly by :class:`repro.core.TriangleCounter`.  ``source_info`` is a
+    JSON-ready provenance dict (ingest stats, cache hit, expected count).
+    """
+    if args.input is not None and args.dataset is not None:
+        raise SystemExit("--input and --dataset are mutually exclusive")
+    kwargs = {}
+    if args.max_chunk_edges is not None:
+        if args.max_chunk_edges < 1:
+            raise SystemExit("--max-chunk-edges must be positive")
+        kwargs["max_chunk_edges"] = args.max_chunk_edges
+    t0 = time.time()
+    if args.input is not None:
+        try:
+            csr, stats = ingest(args.input, cache_dir=args.cache_dir, **kwargs)
+        except (FileNotFoundError, ValueError) as e:
+            # missing file, unknown format, malformed line, corrupt cache —
+            # all user-input problems, all exit cleanly
+            raise SystemExit(f"--input: {e}") from None
+        info = dict(source="input", ingest=stats.as_dict(), expected_triangles=None)
+    elif args.dataset is not None:
+        try:
+            csr, stats, ds = materialize_dataset(
+                args.dataset, args.cache_dir,
+                allow_download=True if args.download else None,
+                fallback_scale=args.fallback_scale, **kwargs,
+            )
+        except (ValueError, RuntimeError, OSError) as e:
+            # registry misuse, checksum mismatch, network failure — all
+            # actionable user-facing conditions, all exit cleanly
+            raise SystemExit(f"--dataset: {e}") from None
+        # fallback graphs have their own counts; only the real download
+        # (or the exact built-in karate graph) honors the published oracle
+        real = stats.source_kind == "download" or ds.name == "karate"
+        info = dict(
+            source="dataset", dataset=ds.name, ingest=stats.as_dict(),
+            expected_triangles=ds.triangles if real else None,
+        )
+    else:
+        edges = build_graph(args)
+        info = dict(source="generator", generator=args.generator,
+                    ingest=None, expected_triangles=None)
+        st = graph_stats(edges)
+        log(f"graph: {st['n_nodes']} nodes, {st['n_edges']} edges, "
+            f"max deg {st['max_degree']}, skew {st['skew']:.1f} "
+            f"(built in {time.time()-t0:.2f}s)")
+        info["graph"] = st
+        return edges, info
+    st = csr.stats()
+    hit = "cache hit" if stats.cache_hit else (
+        f"parsed {stats.raw_edges} raw edges, {stats.spill_runs} spill run(s)")
+    log(f"graph: {st['n_nodes']} nodes, {st['n_edges']} edges, "
+        f"max deg {st['max_degree']}, skew {st['skew']:.1f} "
+        f"({hit}, ready in {time.time()-t0:.2f}s)")
+    info["graph"] = st
+    return csr, info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    add_source_arguments(ap)
     ap.add_argument("--method", default=None, choices=list(METHODS),
                     help="counting schedule (default: auto dispatch)")
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
@@ -58,6 +157,9 @@ def main() -> None:
     ap.add_argument("--baseline", action="store_true", help="also run NumPy CPU baseline")
     ap.add_argument("--distributed", action="store_true", help="shard over local devices")
     ap.add_argument("--clustering", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="print one machine-readable JSON object on stdout "
+                         "(progress lines go to stderr)")
     args = ap.parse_args()
     if args.max_wedge_chunk is not None and args.max_wedge_chunk < 1:
         ap.error("--max-wedge-chunk must be a positive number of wedge slots")
@@ -70,12 +172,11 @@ def main() -> None:
     elif args.method is None:
         args.method = "auto"
 
-    t0 = time.time()
-    edges = build_graph(args)
-    stats = graph_stats(edges)
-    print(f"graph: {stats['n_nodes']} nodes, {stats['n_edges']} edges, "
-          f"max deg {stats['max_degree']}, skew {stats['skew']:.1f} "
-          f"(built in {time.time()-t0:.2f}s)")
+    log = functools.partial(print, file=sys.stderr) if args.json else print
+
+    t_build0 = time.time()
+    graph, info = resolve_graph(args, log=log)
+    build_s = time.time() - t_build0
 
     mesh = None
     if args.method == "distributed":
@@ -85,24 +186,54 @@ def main() -> None:
     tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk,
                          mesh=mesh)
     t0 = time.time()
-    t = tc.count(edges)
+    t = tc.count(graph)
     dt = time.time() - t0
     es = tc.last_stats
-    print(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
-          f"{es.n_chunks} chunk(s), peak wedge buffer {es.peak_wedge_buffer})")
+    log(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
+        f"{es.n_chunks} chunk(s), peak wedge buffer {es.peak_wedge_buffer})")
 
+    expected = info.get("expected_triangles")
+    if expected is not None and t != expected:
+        raise SystemExit(
+            f"ORACLE FAILED: counted {t} but {info.get('dataset')} has "
+            f"{expected} published triangles"
+        )
+
+    baseline_s = None
     if args.baseline:
+        edges = graph.edge_array() if hasattr(graph, "edge_array") else graph
         t0 = time.time()
         tb = count_triangles_numpy(edges)
-        dtb = time.time() - t0
-        print(f"triangles[numpy-cpu] = {tb}  ({dtb*1e3:.1f} ms, "
-              f"speedup {dtb/max(dt,1e-9):.2f}×)")
+        baseline_s = time.time() - t0
+        log(f"triangles[numpy-cpu] = {tb}  ({baseline_s*1e3:.1f} ms, "
+            f"speedup {baseline_s/max(dt,1e-9):.2f}×)")
         assert tb == t
 
+    trans = None
     if args.clustering:
         # derive from the count and wedge total already in hand — no recount
-        trans = 3.0 * t / stats["total_wedges"] if stats["total_wedges"] else 0.0
-        print(f"transitivity = {trans:.4f}")
+        wedges = info["graph"]["total_wedges"]
+        trans = 3.0 * t / wedges if wedges else 0.0
+        log(f"transitivity = {trans:.4f}")
+
+    if args.json:
+        out = dict(
+            triangles=t,
+            method=es.method,
+            resolved_method=es.resolved_method,
+            stats=dict(
+                n_chunks=es.n_chunks,
+                peak_wedge_buffer=es.peak_wedge_buffer,
+                wedge_budget=es.wedge_budget,
+                total_wedges=es.total_wedges,
+                n_directed_edges=es.n_directed_edges,
+            ),
+            graph=info.get("graph"),
+            source={k: v for k, v in info.items() if k != "graph"},
+            timings_s=dict(build=build_s, count=dt, baseline=baseline_s),
+            transitivity=trans,
+        )
+        print(json.dumps(out, indent=None, sort_keys=True))
 
 
 if __name__ == "__main__":

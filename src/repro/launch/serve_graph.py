@@ -9,6 +9,8 @@ latency for both traffic classes::
     python -m repro.launch.serve_graph --scale 10 --stream sliding_window \\
         --window 20000 --batch-size 512 --queries-per-batch 8
     python -m repro.launch.serve_graph --scale 12 --max-wedge-chunk 1048576
+    python -m repro.launch.serve_graph --dataset karate --batch-size 16
+    python -m repro.launch.serve_graph --input graph.txt.gz --cache-dir ~/.cache/tricsr
 
 Updates run the batched delta-counting path (only triangles touched by
 the batch are recounted); queries read the maintained state, so they are
@@ -28,8 +30,8 @@ import time
 import numpy as np
 
 from repro.core import IncrementalTriangleCounter, TriangleCounter
-from repro.graphs import GRAPH_GENERATORS, STREAM_GENERATORS, graph_stats
-from repro.launch.count import build_graph
+from repro.graphs import STREAM_GENERATORS
+from repro.launch.count import add_source_arguments, resolve_graph
 
 QUERY_KINDS = ("count", "per_node", "clustering", "transitivity")
 
@@ -90,15 +92,8 @@ def run_service(
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--generator", choices=sorted(GRAPH_GENERATORS), default="kronecker")
-    ap.add_argument("--scale", type=int, default=10)
-    ap.add_argument("--edge-factor", type=int, default=16)
-    ap.add_argument("--n", type=int, default=100_000)
-    ap.add_argument("--m", type=int, default=1_000_000)
-    ap.add_argument("--m-attach", type=int, default=8)
-    ap.add_argument("--k", type=int, default=50)
-    ap.add_argument("--beta", type=float, default=0.1)
-    ap.add_argument("--seed", type=int, default=0)
+    add_source_arguments(ap)
+    ap.set_defaults(scale=10)  # serving default: smaller than count.py's
     ap.add_argument("--stream", choices=sorted(STREAM_GENERATORS), default="temporal")
     ap.add_argument("--window", type=int, default=None,
                     help="live-edge window for sliding_window (default: half "
@@ -118,11 +113,11 @@ def main() -> None:
     if args.batch_size < 1:
         ap.error("--batch-size must be positive")
 
-    t0 = time.time()
-    edges = build_graph(args)
-    stats = graph_stats(edges)
-    print(f"graph: {stats['n_nodes']} nodes, {stats['n_edges']} edges, "
-          f"max deg {stats['max_degree']} (built in {time.time()-t0:.2f}s)")
+    graph, info = resolve_graph(args)
+    # streams consume edge arrays; a cached CSR seed materializes one
+    # (the cheap direction — one np.repeat over the memory-mapped CSR)
+    edges = graph.edge_array() if hasattr(graph, "edge_array") else graph
+    stats = info["graph"]
 
     if args.stream == "sliding_window":
         window = (args.window if args.window is not None

@@ -1,0 +1,528 @@
+"""Out-of-core ingestion: parsers, external canonicalization, .tricsr cache,
+dataset registry, and the engine plumbing that consumes cached CSRs."""
+import gzip
+import os
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; use the local stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import TriangleCounter, count_triangles_numpy, preprocess
+from repro.core.preprocess import oriented_from_undirected_csr, preprocess_host_offload
+from repro.graphs import (
+    canonicalize_edges,
+    edge_array_to_csr,
+    kronecker_rmat,
+)
+from repro.graphs.io import (
+    CSRGraph,
+    CacheError,
+    DATASETS,
+    ExternalSortStats,
+    canonicalize_edges_external,
+    ingest,
+    iter_edge_chunks,
+    load_tricsr,
+    materialize_dataset,
+    parse_edge_file,
+    save_tricsr,
+    sniff_format,
+)
+from repro.graphs.io.ingest import csr_from_edge_array
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+KARATE = os.path.join(DATA, "karate.txt")
+
+
+# ---------------------------------------------------------------------------
+# parsers
+# ---------------------------------------------------------------------------
+
+
+def test_text_parser_comments_separators_blanks(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_text("# c1\n% c2\n\n0 1\n1\t2\n2,0\n  3   4  \n")
+    np.testing.assert_array_equal(
+        parse_edge_file(p), [[0, 1], [1, 2], [2, 0], [3, 4]]
+    )
+
+
+def test_text_parser_chunk_bound(tmp_path):
+    p = tmp_path / "g.txt"
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 100, size=(997, 2))
+    np.savetxt(p, raw, fmt="%d")
+    chunks = list(iter_edge_chunks(p, max_chunk_edges=100))
+    assert [c.shape[0] for c in chunks] == [100] * 9 + [97]
+    np.testing.assert_array_equal(np.concatenate(chunks), raw)
+
+
+def test_gzip_parser(tmp_path):
+    p = tmp_path / "g.txt.gz"
+    with gzip.open(p, "wt") as fh:
+        fh.write("# zipped\n5 6\n6 7\n")
+    np.testing.assert_array_equal(parse_edge_file(p), [[5, 6], [6, 7]])
+
+
+def test_mtx_parser_valued_and_pattern(tmp_path):
+    pv = tmp_path / "v.mtx"
+    pv.write_text(
+        "%%MatrixMarket matrix coordinate real symmetric\n"
+        "% comment\n3 3 3\n1 2 1.5\n2 3 2.5\n3 1 0.5\n"
+    )
+    np.testing.assert_array_equal(parse_edge_file(pv), [[0, 1], [1, 2], [2, 0]])
+    pp = tmp_path / "p.mtx"
+    pp.write_text(
+        "%%MatrixMarket matrix coordinate pattern general\n4 4 2\n1 4\n4 2\n"
+    )
+    np.testing.assert_array_equal(parse_edge_file(pp), [[0, 3], [3, 1]])
+
+
+def test_mtx_rejects_non_coordinate(tmp_path):
+    p = tmp_path / "d.mtx"
+    p.write_text("%%MatrixMarket matrix array real general\n2 2\n1.0\n")
+    with pytest.raises(ValueError, match="coordinate"):
+        parse_edge_file(p)
+
+
+def test_parser_rejects_malformed_line(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_text("0 1\nnot an edge\n")
+    with pytest.raises(ValueError, match="line 2"):
+        parse_edge_file(p)
+
+
+def test_parser_rejects_weighted_three_column(tmp_path):
+    # a consistently 3-column (weighted) file must error loudly, not
+    # silently re-pair tokens across rows
+    p = tmp_path / "w.txt"
+    p.write_text("0 1 7\n1 2 9\n")
+    with pytest.raises(ValueError, match="two integer node ids"):
+        parse_edge_file(p)
+
+
+def test_parser_rejects_ragged_compensating_rows(tmp_path):
+    # 1-token + 3-token rows have the right *total* token count but must
+    # still error (no re-pairing across rows)
+    p = tmp_path / "r.txt"
+    p.write_text("1\n2 3 4\n")
+    with pytest.raises(ValueError, match="two integer node ids"):
+        parse_edge_file(p)
+
+
+def test_parser_rejects_oversized_int_with_line_number(tmp_path):
+    p = tmp_path / "big.txt"
+    p.write_text("0 1\n1 99999999999999999999999999\n")
+    with pytest.raises(ValueError, match="line 2"):
+        parse_edge_file(p)
+
+
+def test_parser_rejects_negative_ids(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_text("0 1\n-3 4\n")
+    with pytest.raises(ValueError, match="negative node id"):
+        parse_edge_file(p)
+
+
+def test_parser_tolerates_non_ascii_comments(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_bytes("# Universität header\n0 1\n1 2\n".encode("utf-8"))
+    np.testing.assert_array_equal(parse_edge_file(p), [[0, 1], [1, 2]])
+
+
+def test_ingest_missing_file_errors_cleanly(tmp_path):
+    with pytest.raises(FileNotFoundError, match="edge list not found"):
+        ingest(tmp_path / "nope.txt", cache_dir=tmp_path)
+
+
+def test_sniff_format():
+    assert sniff_format("a/b.txt") == "text"
+    assert sniff_format("a/b.edges.gz") == "text"
+    assert sniff_format("a/b.mtx") == "mtx"
+    assert sniff_format("a/b.mtx.gz") == "mtx"
+    with pytest.raises(ValueError):
+        sniff_format("a/b.parquet")
+
+
+# ---------------------------------------------------------------------------
+# canonicalize: negative-id satellite + external == in-memory
+# ---------------------------------------------------------------------------
+
+
+def test_canonicalize_rejects_negative_ids():
+    with pytest.raises(ValueError, match="negative node id"):
+        canonicalize_edges(np.array([[0, 1], [-2, 3]]))
+
+
+def test_canonicalize_rejects_huge_ids():
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        canonicalize_edges(np.array([[0, 2**31]]))
+
+
+def test_external_canonicalize_rejects_negative_ids():
+    with pytest.raises(ValueError, match="negative node id"):
+        canonicalize_edges_external(
+            iter([np.array([[1, 2], [-1, 5]])]), max_chunk_edges=10
+        )
+
+
+@pytest.mark.parametrize("budget", [10, 100, 100000])
+def test_external_matches_in_memory(budget):
+    rng = np.random.default_rng(7)
+    raw = rng.integers(0, 200, size=(3000, 2))
+    mem = canonicalize_edges(raw)
+    stats = ExternalSortStats()
+    ext = canonicalize_edges_external(
+        iter(np.array_split(raw, 7)), max_chunk_edges=budget, stats_out=stats
+    )
+    np.testing.assert_array_equal(mem, ext)
+    assert ext.dtype == mem.dtype
+    if budget == 10:
+        assert stats.spill_runs >= 4 and stats.merge_passes == 1
+    if budget == 100000:
+        assert stats.spill_runs == 0
+
+
+def test_external_empty_and_single_edge():
+    empty = canonicalize_edges_external(iter([]), max_chunk_edges=8)
+    assert empty.shape == (0, 2)
+    one = canonicalize_edges_external(
+        iter([np.array([[3, 1]]), np.array([[1, 3]])]), max_chunk_edges=1
+    )
+    np.testing.assert_array_equal(one, [[1, 3], [3, 1]])
+
+
+# ---------------------------------------------------------------------------
+# .tricsr cache
+# ---------------------------------------------------------------------------
+
+
+def test_tricsr_roundtrip_mmap_and_heap(tmp_path):
+    e = kronecker_rmat(7, seed=4)
+    csr = csr_from_edge_array(e)
+    path = tmp_path / "g.tricsr"
+    save_tricsr(path, csr)
+    for mmap in (True, False):
+        back = load_tricsr(path, mmap=mmap, verify=True)
+        assert back.n_nodes == csr.n_nodes
+        np.testing.assert_array_equal(back.row_offsets, csr.row_offsets)
+        np.testing.assert_array_equal(back.col, csr.col)
+
+
+def test_tricsr_detects_corruption(tmp_path):
+    csr = csr_from_edge_array(kronecker_rmat(6, seed=1))
+    path = tmp_path / "g.tricsr"
+    save_tricsr(path, csr)
+    blob = bytearray(path.read_bytes())
+    blob[-3] ^= 0xFF  # flip a byte inside the col payload
+    path.write_bytes(blob)
+    with pytest.raises(CacheError, match="checksum"):
+        load_tricsr(path, verify=True)
+
+
+def test_tricsr_detects_truncation_and_bad_magic(tmp_path):
+    csr = csr_from_edge_array(kronecker_rmat(6, seed=1))
+    path = tmp_path / "g.tricsr"
+    save_tricsr(path, csr)
+    path.write_bytes(path.read_bytes()[:-8])
+    with pytest.raises(CacheError, match="size"):
+        load_tricsr(path)
+    path.write_bytes(b"NOTTRICS" + b"\0" * 64)
+    with pytest.raises(CacheError, match="magic"):
+        load_tricsr(path)
+
+
+def test_tricsr_empty_graph(tmp_path):
+    csr = csr_from_edge_array(np.empty((0, 2), np.int32))
+    path = tmp_path / "empty.tricsr"
+    save_tricsr(path, csr)
+    back = load_tricsr(path, verify=True)
+    assert back.n_nodes == 0 and back.n_edges == 0
+    assert back.edge_array().shape == (0, 2)
+    assert TriangleCounter().count(back) == 0
+
+
+# ---------------------------------------------------------------------------
+# ingest + engine plumbing
+# ---------------------------------------------------------------------------
+
+
+def _write_one_direction(path, edges):
+    one = edges[edges[:, 0] < edges[:, 1]]
+    np.savetxt(path, one, fmt="%d", delimiter="\t")
+
+
+def test_ingest_cache_miss_then_hit(tmp_path):
+    e = kronecker_rmat(7, seed=9)
+    src = tmp_path / "g.txt"
+    _write_one_direction(src, e)
+    cdir = tmp_path / "cache"
+    csr1, s1 = ingest(src, cache_dir=cdir, max_chunk_edges=64)
+    assert not s1.cache_hit and s1.raw_edges > 0 and s1.spill_runs >= 1
+    csr2, s2 = ingest(src, cache_dir=cdir, max_chunk_edges=64)
+    assert s2.cache_hit and s2.raw_edges == 0 and s2.load_s >= 0
+    np.testing.assert_array_equal(csr1.edge_array(), csr2.edge_array())
+    # touching the source invalidates the cache key
+    os.utime(src, ns=(1, 1))
+    _, s3 = ingest(src, cache_dir=cdir, max_chunk_edges=64)
+    assert not s3.cache_hit
+
+
+def test_engine_accepts_cached_csr_and_oriented_csr(tmp_path, small_graphs):
+    for name, e in small_graphs.items():
+        csr = csr_from_edge_array(e)
+        tc = TriangleCounter(method="wedge_bsearch")
+        want = tc.count(e)
+        assert tc.count(csr) == want, name
+        oc = preprocess_host_offload(csr)
+        assert tc.count(oc) == want, name
+        np.testing.assert_array_equal(tc.per_node(csr), tc.per_node(e))
+        np.testing.assert_array_equal(tc.clustering(csr), tc.clustering(e))
+        assert tc.transitivity(csr) == pytest.approx(tc.transitivity(e))
+
+
+def test_csr_from_forward_pairs_matches_lexsort_build(small_graphs):
+    from repro.graphs import csr_from_forward_pairs
+
+    for name, e in small_graphs.items():
+        canon = canonicalize_edges(e)  # normalize layout: fwd block + mirror
+        n = int(canon.max()) + 1 if canon.size else 0
+        m = canon.shape[0] // 2
+        row_ref, col_ref = edge_array_to_csr(canon, n)
+        row, col = csr_from_forward_pairs(canon[:m, 0], canon[:m, 1], n)
+        np.testing.assert_array_equal(row, row_ref, err_msg=name)
+        np.testing.assert_array_equal(col, col_ref, err_msg=name)
+    # interleaved layout (not fwd-block-first) must route to the lexsort
+    # path inside csr_from_edge_array and still be correct
+    tri = small_graphs["triangle"]
+    g = csr_from_edge_array(tri)
+    row_ref, col_ref = edge_array_to_csr(tri, 3)
+    np.testing.assert_array_equal(g.row_offsets, row_ref)
+    np.testing.assert_array_equal(g.col, col_ref)
+
+
+def test_oriented_from_csr_matches_preprocess(small_graphs):
+    import jax.numpy as jnp
+
+    for name, e in small_graphs.items():
+        n = int(e.max()) + 1
+        row, col = edge_array_to_csr(e, n)
+        fast = oriented_from_undirected_csr(row, col, n)
+        ref = preprocess(jnp.asarray(e), n_nodes=n)
+        for field, a, b in zip(ref._fields, fast, ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name}.{field}")
+
+
+# ---------------------------------------------------------------------------
+# round-trip property tests (hypothesis / stub)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)),
+             min_size=0, max_size=120),
+    st.sampled_from(["text", "mtx"]),
+    st.integers(1, 37),
+)
+def test_roundtrip_property(pairs, fmt, chunk):
+    """file → parse → external canonicalize → .tricsr → load ==
+    in-memory canonicalize_edges + edge_array_to_csr.
+
+    (tempfile instead of a tmp_path fixture: the hypothesis stub's
+    ``@given`` wrapper cannot mix drawn arguments with pytest fixtures.)
+    """
+    import tempfile
+
+    raw = np.array(pairs, dtype=np.int64).reshape(-1, 2)
+    with tempfile.TemporaryDirectory(prefix="tricsr-prop-") as tmp:
+        if fmt == "text":
+            src = os.path.join(tmp, "g.txt")
+            with open(src, "w") as fh:
+                fh.write("# prop\n")
+                for u, v in raw:
+                    fh.write(f"{u}\t{v}\n")
+        else:
+            src = os.path.join(tmp, "g.mtx")
+            with open(src, "w") as fh:
+                fh.write("%%MatrixMarket matrix coordinate pattern general\n")
+                fh.write(f"31 31 {len(raw)}\n")
+                for u, v in raw:
+                    fh.write(f"{u + 1} {v + 1}\n")
+        cdir = os.path.join(tmp, "cache")
+        csr, stats = ingest(src, cache_dir=cdir, max_chunk_edges=chunk)
+        mem_edges = canonicalize_edges(raw)
+        n = int(mem_edges.max()) + 1 if mem_edges.size else 0
+        row, col = edge_array_to_csr(mem_edges, n)
+        assert csr.n_nodes == n
+        np.testing.assert_array_equal(np.asarray(csr.row_offsets), row)
+        np.testing.assert_array_equal(np.asarray(csr.col), col)
+        # cache hit returns the identical CSR
+        csr2, s2 = ingest(src, cache_dir=cdir, max_chunk_edges=chunk)
+        assert s2.cache_hit
+        np.testing.assert_array_equal(np.asarray(csr.col), np.asarray(csr2.col))
+        # and the engine agrees with the numpy oracle on the loaded CSR
+        if mem_edges.size:
+            assert TriangleCounter().count(csr) == count_triangles_numpy(mem_edges)
+
+
+# ---------------------------------------------------------------------------
+# the out-of-core oracle (ISSUE acceptance): Kronecker-14 through ≥4 spills
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_core_oracle_kron14(tmp_path):
+    e = kronecker_rmat(14, edge_factor=16, seed=0)
+    src = tmp_path / "kron14.txt"
+    _write_one_direction(src, e)
+    cdir = tmp_path / "cache"
+    # raw one-direction file has m/2 ≈ 100k+ rows; 1/8 of that forces ≥ 4
+    # spill runs through the external sorter
+    budget = (e.shape[0] // 2) // 8
+    stats = ExternalSortStats()
+    chunks = iter_edge_chunks(src, budget)
+    canonical = canonicalize_edges_external(
+        chunks, max_chunk_edges=budget, stats_out=stats
+    )
+    assert stats.spill_runs >= 4, stats
+    np.testing.assert_array_equal(canonical, e)  # bit-identical
+
+    csr, s1 = ingest(src, cache_dir=cdir, max_chunk_edges=budget)
+    assert not s1.cache_hit and s1.spill_runs >= 4
+    tc = TriangleCounter(method="wedge_bsearch")
+    t_file = tc.count(csr)
+    t_mem = tc.count(e)
+    assert t_file == t_mem
+
+    csr2, s2 = ingest(src, cache_dir=cdir, max_chunk_edges=budget)
+    assert s2.cache_hit and s2.raw_edges == 0 and s2.spill_runs == 0
+    assert tc.count(csr2) == t_mem
+
+
+# ---------------------------------------------------------------------------
+# fixture + registry
+# ---------------------------------------------------------------------------
+
+
+def test_karate_fixture_counts_45(tmp_path):
+    csr, stats = ingest(KARATE, cache_dir=tmp_path)
+    assert csr.n_nodes == 34 and csr.n_edges == 78
+    assert TriangleCounter().count(csr) == 45
+
+
+def test_registry_karate_offline_roundtrip(tmp_path):
+    csr, stats, ds = materialize_dataset("karate", tmp_path)
+    assert stats.source_kind == "fallback" and not stats.cache_hit
+    assert TriangleCounter().count(csr) == ds.triangles == 45
+    csr2, s2, _ = materialize_dataset("karate", tmp_path)
+    assert s2.cache_hit
+    np.testing.assert_array_equal(csr.edge_array(), csr2.edge_array())
+
+
+def test_registry_fallback_scale_override(tmp_path):
+    csr, stats, ds = materialize_dataset(
+        "soc-livejournal", tmp_path, fallback_scale=7
+    )
+    assert stats.source_kind == "fallback"
+    assert 0 < csr.n_nodes <= 1 << 7
+    # deterministic: same call, same cache file, now a hit
+    _, s2, _ = materialize_dataset("soc-livejournal", tmp_path, fallback_scale=7)
+    assert s2.cache_hit
+
+
+def test_registry_fallback_scale_applies_to_non_kronecker(tmp_path):
+    # roadnet-ca's fallback is watts_strogatz; --fallback-scale must
+    # shrink it too, not silently generate the full 2**17-node graph
+    csr, stats, _ = materialize_dataset("roadnet-ca", tmp_path, fallback_scale=6)
+    assert stats.source_kind == "fallback"
+    assert 0 < csr.n_nodes <= 1 << 6
+
+
+def test_host_offload_passes_oriented_csr_through(small_graphs):
+    e = small_graphs["kron"]
+    oc = preprocess_host_offload(e)
+    again = preprocess_host_offload(oc)
+    assert again is oc  # must not re-orient an already-oriented CSR
+
+
+def test_registry_download_beats_stale_fallback(tmp_path, monkeypatch):
+    # an offline run writes a synthetic fallback; a later --download run
+    # must fetch the real file, not silently keep serving the stand-in
+    from repro.graphs.io import registry as reg
+
+    _, s1, _ = materialize_dataset("com-dblp", tmp_path, fallback_scale=None,
+                                   allow_download=False)
+    assert s1.source_kind == "fallback"
+
+    def fake_download(ds, dest):
+        with open(KARATE) as src, open(dest, "w") as out:
+            out.write(src.read())
+
+    monkeypatch.setattr(reg, "_download", fake_download)
+    # the real source is .txt.gz-named and the fake writes plain text, so
+    # swap in a .txt-url variant of the dataset for the download leg
+    monkeypatch.setitem(
+        reg.DATASETS, "com-dblp",
+        reg.Dataset(
+            name="com-dblp", description="test",
+            url="http://example.com/com-dblp.txt",
+            sha256=None, n_nodes=34, n_edges=78, triangles=45,
+            fallback=reg._kron(16, 4),
+        ),
+    )
+    csr, s2, _ = materialize_dataset("com-dblp", tmp_path, allow_download=True)
+    assert s2.source_kind == "download"
+    assert TriangleCounter().count(csr) == 45
+
+
+def test_registry_download_conflicts_with_fallback_scale(tmp_path):
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        materialize_dataset("com-dblp", tmp_path, allow_download=True,
+                            fallback_scale=8)
+
+
+def test_registry_download_rejected_for_fallback_only_dataset(tmp_path):
+    # kron-logn21 has no parseable upstream; an explicit download request
+    # must error, not silently count the synthetic stand-in
+    with pytest.raises(ValueError, match="no downloadable source"):
+        materialize_dataset("kron-logn21", tmp_path, allow_download=True)
+
+
+def test_ingest_spills_on_disk_without_cache_dir(tmp_path, monkeypatch):
+    # no cache_dir: spill runs must land next to the source (real disk),
+    # not in the system temp dir (often RAM-backed tmpfs)
+    import sys
+    import tempfile
+
+    import repro.graphs.io.ingest  # noqa: F401 — ensure module is loaded
+    # the package attribute `ingest` is the function; fetch the module
+    ing = sys.modules["repro.graphs.io.ingest"]
+
+    e = kronecker_rmat(7, seed=11)
+    src = tmp_path / "g.txt"
+    _write_one_direction(src, e)
+    seen = []
+    orig = tempfile.mkdtemp
+
+    def spy(*a, **kw):
+        path = orig(*a, **kw)
+        seen.append(kw.get("dir"))
+        return path
+
+    monkeypatch.setattr(ing.tempfile, "mkdtemp", spy)
+    csr, stats = ingest(src, max_chunk_edges=64)
+    assert stats.spill_runs >= 1
+    assert seen and str(seen[0]) == str(tmp_path)
+    # spill dir cleaned up afterwards; only the source file remains
+    assert sorted(os.listdir(tmp_path)) == ["g.txt"]
+
+
+def test_registry_table1_entries_complete():
+    assert {"karate", "soc-livejournal", "com-orkut", "kron-logn21"} <= set(DATASETS)
+    for ds in DATASETS.values():
+        assert ds.fallback is not None, f"{ds.name} has no offline fallback"
+        assert ds.url is not None or ds.fallback is not None
