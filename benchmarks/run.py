@@ -7,6 +7,7 @@ import traceback
 
 from . import (
     ablations,
+    analytics,
     engine_chunking,
     fig1_scaling,
     ingest,
@@ -30,6 +31,7 @@ SUITES = {
     "chunking": engine_chunking.run,   # engine — memory-bounded partitioning
     "streaming": streaming.run,        # incremental updates vs full recount
     "ingest": ingest.run,              # out-of-core parse/canonicalize/cache
+    "analytics": analytics.run,        # support / k-truss / clustering
 }
 
 

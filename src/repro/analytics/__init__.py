@@ -1,0 +1,79 @@
+"""Graph-structure analytics on top of the triangle-counting engine.
+
+The paper's stated motivation (§I) is computing clustering coefficients
+and the transitivity ratio; the canonical workloads layered on a fast
+triangle kernel beyond bare counts are per-edge triangle *support* and
+*k-truss* decomposition (Wang et al., arXiv:1804.06926; Arifuzzaman et
+al., arXiv:1706.05151).  This package is that analytics stack:
+
+``support``
+    Chunked per-edge triangle-support kernel — jitted alongside the
+    engine's chunk kernels, honoring ``max_wedge_chunk``, int32 device
+    partials + int64 host accumulation, scattering each closed wedge
+    back to the three directed edges of its triangle.
+``truss``
+    Exact k-truss decomposition by iterative support-peeling on the
+    oriented CSR (recompute rounds, pow2 shape bucketing for compile
+    stability), per-edge trussness + max-k subgraph extraction.
+``metrics``
+    Local/average clustering, transitivity, degree-binned clustering
+    profiles and top-k triangle-dense nodes/edges — all routed through
+    :class:`repro.core.engine.TriangleCounter`, so they accept raw edge
+    arrays, an ``OrientedCSR``, or a cached/mmap'd
+    :class:`repro.graphs.io.CSRGraph` alike.
+
+Everything builds on the engine's stable internal API
+(:func:`repro.core.engine.prepare_oriented`,
+:func:`repro.core.engine.iter_wedge_chunks`, the chunk kernels) — the
+subsystem adds no second copy of the chunking or accumulation discipline.
+
+NOTE on import order: modules here import ``repro.core.engine`` /
+``repro.core.count`` / ``repro.core.preprocess`` directly (never the
+``repro.core`` package root), so ``repro.core.clustering`` can re-export
+:mod:`repro.analytics.metrics` without a cycle.  The ``repro.core``
+import below must stay FIRST: when ``repro.analytics`` is imported
+before ``repro.core``, it drives the core package (and its re-entrant
+``clustering`` → ``analytics.metrics`` hop) to completion before any
+analytics submodule starts loading, which keeps both import orders
+cycle-safe.
+"""
+import repro.core  # noqa: F401  (see note above — load order matters)
+
+from .support import EdgeSupport, chunk_support_kernel, edge_support, support_on_arrays
+from .truss import TrussDecomposition, k_truss_decomposition, k_truss_subgraph
+from .metrics import (
+    average_clustering,
+    clustering_from_counts,
+    clustering_profile,
+    graph_report,
+    local_clustering,
+    node_triangle_features,
+    per_node_triangle_counts,
+    profile_from_counts,
+    top_support_edges,
+    top_triangle_nodes,
+    transitivity,
+    transitivity_from_counts,
+)
+
+__all__ = [
+    "EdgeSupport",
+    "chunk_support_kernel",
+    "edge_support",
+    "support_on_arrays",
+    "TrussDecomposition",
+    "k_truss_decomposition",
+    "k_truss_subgraph",
+    "average_clustering",
+    "clustering_from_counts",
+    "clustering_profile",
+    "graph_report",
+    "local_clustering",
+    "node_triangle_features",
+    "per_node_triangle_counts",
+    "profile_from_counts",
+    "top_support_edges",
+    "top_triangle_nodes",
+    "transitivity",
+    "transitivity_from_counts",
+]

@@ -32,6 +32,12 @@ from .engine import (
     choose_method,
     plan_edge_chunks,
     accumulate_partials,
+    prepare_oriented,
+    degree_histogram,
+    search_steps,
+    iter_wedge_chunks,
+    chunk_count_kernel,
+    chunk_per_node_kernel,
 )
 from .count import (
     WedgePlan,
@@ -71,6 +77,12 @@ __all__ = [
     "choose_method",
     "plan_edge_chunks",
     "accumulate_partials",
+    "prepare_oriented",
+    "degree_histogram",
+    "search_steps",
+    "iter_wedge_chunks",
+    "chunk_count_kernel",
+    "chunk_per_node_kernel",
     "OrientedCSR",
     "preprocess",
     "preprocess_host_offload",

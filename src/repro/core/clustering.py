@@ -1,14 +1,28 @@
 """Clustering coefficient and transitivity ratio (the paper's motivating
-applications, §I) computed from the triangle-counting core.
+applications, §I) — thin wrappers over :mod:`repro.analytics.metrics`.
+
+Historically these called the wedge-plan primitives directly, bypassing
+the :class:`repro.core.engine.TriangleCounter` engine — which meant no
+``max_wedge_chunk`` memory bounding and no cached-CSR inputs, so the
+motivating application could not run on the very graphs the ingestion
+subsystem can load.  They now route through the engine via the
+analytics subsystem; the public signatures are unchanged (with new
+optional ``method``/``max_wedge_chunk`` knobs), and every function
+accepts raw canonical edge arrays, ``OrientedCSR`` objects and cached
+:class:`repro.graphs.io.CSRGraph` files alike.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .count import make_wedge_plan, per_node_triangles
-from .preprocess import preprocess
+from repro.analytics.metrics import (
+    average_clustering,
+    clustering_from_counts,
+    local_clustering,
+    node_triangle_features as _node_triangle_features,
+    transitivity as _transitivity,
+    transitivity_from_counts,
+)
 
 __all__ = [
     "clustering_from_counts",
@@ -20,59 +34,54 @@ __all__ = [
 ]
 
 
-def clustering_from_counts(tri: np.ndarray, deg: np.ndarray) -> np.ndarray:
-    """c(v) = 2·T(v) / (deg(v)·(deg(v)−1)) from host count/degree arrays.
-
-    Shared formula for this module and the engine
-    (:meth:`repro.core.engine.TriangleCounter.clustering`).
-    """
-    pairs = deg * (deg - 1)
-    return np.where(pairs > 0, 2.0 * tri / np.maximum(pairs, 1), 0.0)
-
-
-def transitivity_from_counts(n_triangles: int, deg: np.ndarray) -> float:
-    """3·#triangles / #wedges from a host count and degree array."""
-    wedges = int((deg.astype(np.int64) * (deg.astype(np.int64) - 1) // 2).sum())
-    return 3.0 * n_triangles / wedges if wedges else 0.0
-
-
-def _csr(edges, n_nodes=None):
-    edges = np.asarray(edges)
-    if n_nodes is None:
-        n_nodes = int(edges.max()) + 1 if edges.size else 0
-    return preprocess(jnp.asarray(edges), n_nodes=n_nodes)
-
-
-def local_clustering_coefficient(edges, n_nodes: int | None = None) -> jax.Array:
+def local_clustering_coefficient(
+    edges,
+    n_nodes: int | None = None,
+    *,
+    method: str = "auto",
+    max_wedge_chunk: int | None = None,
+) -> np.ndarray:
     """c(v) = 2·T(v) / (deg(v)·(deg(v)−1)); 0 where degree < 2."""
-    csr = _csr(edges, n_nodes)
-    tri = per_node_triangles(csr, make_wedge_plan(csr))
-    deg = csr.degree
-    pairs = deg * (deg - 1)
-    return jnp.where(pairs > 0, 2.0 * tri / pairs, 0.0)
+    return local_clustering(
+        edges, n_nodes, method=method, max_wedge_chunk=max_wedge_chunk
+    )
 
 
-def average_clustering_coefficient(edges, n_nodes: int | None = None) -> float:
-    return float(jnp.mean(local_clustering_coefficient(edges, n_nodes)))
+def average_clustering_coefficient(
+    edges,
+    n_nodes: int | None = None,
+    *,
+    method: str = "auto",
+    max_wedge_chunk: int | None = None,
+) -> float:
+    return average_clustering(
+        edges, n_nodes, method=method, max_wedge_chunk=max_wedge_chunk
+    )
 
 
-def transitivity(edges, n_nodes: int | None = None) -> float:
+def transitivity(
+    edges,
+    n_nodes: int | None = None,
+    *,
+    method: str = "auto",
+    max_wedge_chunk: int | None = None,
+) -> float:
     """3·#triangles / #wedges (the transitivity ratio)."""
-    csr = _csr(edges, n_nodes)
-    tri = per_node_triangles(csr, make_wedge_plan(csr))
-    n_tri = int(np.asarray(tri, dtype=np.int64).sum()) // 3
-    return transitivity_from_counts(n_tri, np.asarray(csr.degree))
+    return _transitivity(edges, n_nodes, method=method, max_wedge_chunk=max_wedge_chunk)
 
 
-def node_triangle_features(edges, n_nodes: int | None = None) -> jax.Array:
+def node_triangle_features(
+    edges,
+    n_nodes: int | None = None,
+    *,
+    method: str = "auto",
+    max_wedge_chunk: int | None = None,
+) -> np.ndarray:
     """(n, 3) per-node feature block [degree, triangles, clustering coeff].
 
     This is the hook by which the paper's technique feeds the GNN stack:
     any graph arch config may prepend these features to its node inputs.
     """
-    csr = _csr(edges, n_nodes)
-    tri = per_node_triangles(csr, make_wedge_plan(csr))
-    deg = csr.degree
-    pairs = deg * (deg - 1)
-    cc = jnp.where(pairs > 0, 2.0 * tri / pairs, 0.0)
-    return jnp.stack([deg.astype(jnp.float32), tri.astype(jnp.float32), cc], axis=1)
+    return _node_triangle_features(
+        edges, n_nodes, method=method, max_wedge_chunk=max_wedge_chunk
+    )

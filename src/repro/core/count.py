@@ -45,6 +45,7 @@ __all__ = [
     "WedgePlan",
     "make_wedge_plan",
     "expand_and_close_wedges",
+    "expand_and_close_wedges_indexed",
     "segmented_int32_sum",
     "count_wedges_found",
     "count_triangles_csr",
@@ -80,14 +81,17 @@ def make_wedge_plan(csr: OrientedCSR, pad_to: int | None = None) -> WedgePlan:
     return WedgePlan(total_wedges=max(total, 1), n_search_steps=steps)
 
 
-def _batched_contains(
+def _batched_search(
     col: jax.Array, lo: jax.Array, hi: jax.Array, target: jax.Array, n_steps: int
-) -> jax.Array:
-    """Branch-free batched binary search: is ``target`` in ``col[lo:hi]``?
+) -> tuple[jax.Array, jax.Array]:
+    """Branch-free batched binary search over ``col[lo:hi]``.
 
     All of ``lo``/``hi``/``target`` are rank-1 and processed in lockstep;
     each of the ``n_steps`` iterations is one vectorized gather + compare,
-    so the VPU stays full regardless of degree skew.
+    so the VPU stays full regardless of degree skew.  Returns
+    ``(found, pos)`` where ``pos`` is the insertion index — the global
+    ``col`` index of the match whenever ``found`` is true, which is what
+    per-edge attribution (triangle support) scatters against.
     """
     end = hi
 
@@ -102,19 +106,25 @@ def _batched_contains(
 
     lo, hi = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
     safe = jnp.clip(lo, 0, col.shape[0] - 1)
-    return (lo < end) & (col[safe] == target)
+    return (lo < end) & (col[safe] == target), safe
 
 
-def expand_and_close_wedges(src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps):
-    """Expand a (possibly −1-padded) directed-edge array into wedges and
-    close them with the batched binary search.
+def _batched_contains(
+    col: jax.Array, lo: jax.Array, hi: jax.Array, target: jax.Array, n_steps: int
+) -> jax.Array:
+    """Is ``target`` in ``col[lo:hi]``? (membership-only view of the search)."""
+    found, _ = _batched_search(col, lo, hi, target, n_steps)
+    return found
 
-    The single shared implementation of the wedge schedule's inner body —
-    used unchunked here (:func:`count_wedges_found`) and per budget-sized
-    chunk by :mod:`repro.core.engine`.  Returns ``(hit, u, v, w)`` where
-    ``hit[i]`` marks wedge slot ``i`` as a closed, non-padding triangle.
-    ``wedge_budget`` (static) is the buffer length; padding slots and −1
-    edge slots contribute ``hit = False``.
+
+def _expand_close_body(src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps):
+    """Shared wedge expansion + closure; returns every per-slot artifact.
+
+    ``(hit, edge_id, u, v, w, w_idx, vw_idx)``: ``edge_id`` is the slot's
+    originating edge (local to this chunk), ``w_idx`` the global directed
+    edge index of ``(u, w)`` (the wedge arm inside ``col``), ``vw_idx``
+    the global index of the closing edge ``(v, w)`` found by the search.
+    Index values on non-``hit`` slots are clipped-safe garbage.
     """
     m_local = src_e.shape[0]
     valid_e = src_e >= 0
@@ -131,8 +141,46 @@ def expand_and_close_wedges(src_e, dst_e, row_offsets, col, out_deg, wedge_budge
     v = safe_dst[edge_id]
     w_idx = jnp.clip(row_offsets[u] + pos, 0, col.shape[0] - 1)
     w = col[w_idx]
-    found = _batched_contains(col, row_offsets[v], row_offsets[v + 1], w, n_steps)
-    return found & valid, u, v, w
+    found, vw_idx = _batched_search(col, row_offsets[v], row_offsets[v + 1], w, n_steps)
+    return found & valid, edge_id, u, v, w, w_idx, vw_idx
+
+
+def expand_and_close_wedges(src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps):
+    """Expand a (possibly −1-padded) directed-edge array into wedges and
+    close them with the batched binary search.
+
+    The single shared implementation of the wedge schedule's inner body —
+    used unchunked here (:func:`count_wedges_found`) and per budget-sized
+    chunk by :mod:`repro.core.engine`.  Returns ``(hit, u, v, w)`` where
+    ``hit[i]`` marks wedge slot ``i`` as a closed, non-padding triangle.
+    ``wedge_budget`` (static) is the buffer length; padding slots and −1
+    edge slots contribute ``hit = False``.
+    """
+    hit, _, u, v, w, _, _ = _expand_close_body(
+        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+    )
+    return hit, u, v, w
+
+
+def expand_and_close_wedges_indexed(
+    src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+):
+    """Wedge closure with *edge-index* attribution (per-edge support).
+
+    Like :func:`expand_and_close_wedges`, but instead of the triangle's
+    vertices each hit slot reports the three **directed edge indices** of
+    the triangle it closes: ``(hit, edge_id, uw_idx, vw_idx)`` where
+    ``edge_id`` is the originating edge ``(u, v)`` local to this chunk
+    (add the chunk's global offset before scattering), ``uw_idx`` is the
+    global ``col`` index of the wedge arm ``(u, w)`` and ``vw_idx`` the
+    global index of the closing edge ``(v, w)``.  This is the primitive
+    under :mod:`repro.analytics.support` — every closed wedge contributes
+    one unit of support to exactly those three edges.
+    """
+    hit, edge_id, _, _, _, w_idx, vw_idx = _expand_close_body(
+        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+    )
+    return hit, edge_id, w_idx, vw_idx
 
 
 def segmented_int32_sum(hits: jax.Array, seg: int = 1 << 20) -> jax.Array:

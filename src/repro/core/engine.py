@@ -87,6 +87,13 @@ __all__ = [
     "choose_method",
     "plan_edge_chunks",
     "accumulate_partials",
+    "prepare_oriented",
+    "degree_histogram",
+    "search_steps",
+    "next_pow2",
+    "iter_wedge_chunks",
+    "chunk_count_kernel",
+    "chunk_per_node_kernel",
     "METHODS",
 ]
 
@@ -174,11 +181,16 @@ class EngineStats:
 # ---------------------------------------------------------------------------
 # chunk kernels (compiled once per (shape-budget, steps) pair, reused
 # across every chunk — chunk count drives launches, not compiles)
+#
+# These, together with `iter_wedge_chunks` / `search_steps` /
+# `prepare_oriented` below, are the engine's *stable internal API*: the
+# plumbing other subsystems (repro.core.incremental, repro.analytics)
+# build chunked wedge workloads from, instead of growing private copies.
 # ---------------------------------------------------------------------------
 
 
 @functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
-def _chunk_count_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
+def chunk_count_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
     """Count triangles closed by one −1-padded edge chunk.
 
     Returns a *vector* of int32 partials, one per 2²⁰-slot segment of the
@@ -193,7 +205,7 @@ def _chunk_count_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget
 
 
 @functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
-def _chunk_per_node_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
+def chunk_per_node_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budget, n_steps):
     """Per-vertex triangle incidences contributed by one edge chunk."""
     hit, u, v, w = expand_and_close_wedges(
         src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
@@ -205,6 +217,119 @@ def _chunk_per_node_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_bud
     out = out.at[v].add(inc)
     out = out.at[w].add(inc)
     return out
+
+
+# legacy underscore names (pre-analytics); new code uses the public ones
+_chunk_count_kernel = chunk_count_kernel
+_chunk_per_node_kernel = chunk_per_node_kernel
+
+
+def search_steps(csr: OrientedCSR) -> int:
+    """⌈log₂(max out-degree + 1)⌉ — the binary-search depth the chunk
+    kernels need for this CSR (static argument, shared by all chunks)."""
+    max_deg = int(np.asarray(csr.out_degree).max()) if csr.n_nodes else 0
+    return max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
+
+
+def prepare_oriented(edges, n_nodes: int | None = None) -> OrientedCSR | None:
+    """Normalize any accepted graph input to an :class:`OrientedCSR`.
+
+    Accepts a pre-built :class:`OrientedCSR` (returned as-is), a cached
+    undirected CSR (anything with ``row_offsets``/``col``/``n_nodes``,
+    e.g. ``repro.graphs.io.CSRGraph`` — oriented by a host-side filter,
+    never re-canonicalized), or a canonical edge array (full
+    preprocessing).  Returns ``None`` for an empty graph.  This is the
+    shared input front door of :class:`TriangleCounter` and the analytics
+    subsystem — call it once and pass the CSR around to avoid repeated
+    preprocessing.
+    """
+    if isinstance(edges, OrientedCSR):
+        csr = edges
+    elif hasattr(edges, "row_offsets") and hasattr(edges, "col"):
+        csr = oriented_from_undirected_csr(
+            edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)
+        )
+    else:
+        edges = np.asarray(edges)
+        if edges.size == 0:
+            return None
+        if n_nodes is None:
+            n_nodes = int(edges.max()) + 1
+        csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
+    if csr.n_directed_edges > 0:
+        return csr
+    return None
+
+
+def degree_histogram(edges, n_nodes: int | None = None) -> tuple[np.ndarray, int]:
+    """Undirected degrees + node count for any accepted graph input kind."""
+    if isinstance(edges, OrientedCSR):
+        return np.asarray(edges.degree, dtype=np.int64), edges.n_nodes
+    if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
+        return np.diff(np.asarray(edges.row_offsets)).astype(np.int64), int(
+            getattr(edges, "n_nodes", np.asarray(edges.row_offsets).shape[0] - 1)
+        )
+    edges = np.asarray(edges)
+    if edges.size == 0:
+        return np.zeros((n_nodes or 0,), np.int64), n_nodes or 0
+    if n_nodes is None:
+        n_nodes = int(edges.max()) + 1
+    return np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64), n_nodes
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two ≥ x (pow2 shape bucketing helper)."""
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def iter_wedge_chunks(csr: OrientedCSR, max_wedge_chunk: int | None, *, bucket_pow2: bool = False):
+    """Lazily yield −1-padded fixed-shape ``(src, dst, start)`` chunks.
+
+    ``start`` is each chunk's offset into the directed edge list — add it
+    to a kernel's local edge ids to recover global edge indices (the
+    per-edge support scatter needs this).  ``csr.src``/``csr.col`` may
+    carry a −1-padded tail (padded slots contribute no wedges), and
+    ``bucket_pow2`` rounds the chunk width and the peak buffer up to
+    powers of two — together these let shape-churning callers (the truss
+    peel's shrinking subgraphs) reuse O(log m) kernel compilations.
+
+    Returns ``(generator, n_chunks, peak, total_wedges)`` where ``peak``
+    is the per-launch buffer: the largest chunk's wedge load (pow2-rounded
+    when bucketing), which the kernels materialize exactly — it can
+    undercut the planner's effective budget when no greedy chunk fills
+    it.  Only one padded chunk copy is resident at a time, so host
+    overhead stays O(chunk) in the larger-than-memory regime the budget
+    targets.
+    """
+    src = np.asarray(csr.src)
+    out_deg = np.asarray(csr.out_degree)
+    reps = np.where(src >= 0, out_deg[np.maximum(src, 0)], 0).astype(np.int64)
+    bounds, _ = plan_edge_chunks(reps, max_wedge_chunk)
+    cum = np.concatenate([[0], np.cumsum(reps)])
+    peak = max(int(cum[end] - cum[start]) for start, end in bounds)
+    peak = max(peak, 1)
+    edges_per_chunk = max(end - start for start, end in bounds)
+    if bucket_pow2:
+        peak = next_pow2(peak)
+        edges_per_chunk = next_pow2(edges_per_chunk)
+
+    def gen():
+        if len(bounds) == 1 and edges_per_chunk == src.shape[0]:
+            # single full chunk: feed the (possibly device-resident) CSR
+            # arrays directly — no host round-trip, no copies
+            yield csr.src, csr.col, 0
+            return
+        dst = np.asarray(csr.col)
+        for start, end in bounds:
+            pad = edges_per_chunk - (end - start)
+            s, d = src[start:end], dst[start:end]
+            if pad:
+                fill = np.full(pad, -1, np.int32)
+                s = np.concatenate([s, fill])
+                d = np.concatenate([d, fill])
+            yield s.astype(np.int32, copy=False), d.astype(np.int32, copy=False), start
+
+    return gen(), len(bounds), peak, int(reps.sum())
 
 
 # ---------------------------------------------------------------------------
@@ -334,18 +459,7 @@ class TriangleCounter:
     @staticmethod
     def _degree_hist(edges, n_nodes: int | None):
         """Undirected degrees + node count for any accepted input kind."""
-        if isinstance(edges, OrientedCSR):
-            return np.asarray(edges.degree, dtype=np.int64), edges.n_nodes
-        if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
-            return np.diff(np.asarray(edges.row_offsets)).astype(np.int64), int(
-                getattr(edges, "n_nodes", np.asarray(edges.row_offsets).shape[0] - 1)
-            )
-        edges = np.asarray(edges)
-        if edges.size == 0:
-            return np.zeros((n_nodes or 0,), np.int64), n_nodes or 0
-        if n_nodes is None:
-            n_nodes = int(edges.max()) + 1
-        return np.bincount(edges[:, 0], minlength=n_nodes).astype(np.int64), n_nodes
+        return degree_histogram(edges, n_nodes)
 
     def clustering(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Local clustering coefficients c(v) = 2·T(v) / (deg(v)·(deg(v)−1))."""
@@ -370,23 +484,8 @@ class TriangleCounter:
     # -- shared plumbing ----------------------------------------------------
 
     def _prepare(self, edges, n_nodes: int | None) -> OrientedCSR | None:
-        if isinstance(edges, OrientedCSR):
-            csr = edges
-        elif hasattr(edges, "row_offsets") and hasattr(edges, "col"):
-            # cached undirected CSR (repro.graphs.io.CSRGraph or
-            # duck-typed equivalent): orient host-side, skip the sort
-            csr = oriented_from_undirected_csr(
-                edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)
-            )
-        else:
-            edges = np.asarray(edges)
-            if edges.size == 0:
-                csr = None
-            else:
-                if n_nodes is None:
-                    n_nodes = int(edges.max()) + 1
-                csr = preprocess(jnp.asarray(edges), n_nodes=n_nodes)
-        if csr is not None and csr.n_directed_edges > 0:
+        csr = prepare_oriented(edges, n_nodes)
+        if csr is not None:
             return csr
         # empty graph: no CSR to resolve "auto" against; record the
         # trivial schedule
@@ -413,46 +512,14 @@ class TriangleCounter:
 
     @staticmethod
     def _search_steps(csr: OrientedCSR) -> int:
-        max_deg = int(np.asarray(csr.out_degree).max()) if csr.n_nodes else 0
-        return max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
+        return search_steps(csr)
 
     def _wedge_chunks(self, csr: OrientedCSR):
-        """Lazily yield −1-padded fixed-shape (src, dst) chunks.
-
-        Returns ``(generator, n_chunks, peak, total_wedges)`` where
-        ``peak`` is the true per-launch buffer: the largest chunk's wedge
-        load, which the kernels materialize exactly — it can undercut the
-        planner's effective budget when no greedy chunk fills it.  Only
-        one padded chunk copy is resident at a time, so host overhead
-        stays O(chunk) in the larger-than-memory regime the budget
-        targets.
-        """
-        src = np.asarray(csr.src)
-        out_deg = np.asarray(csr.out_degree)
-        reps = out_deg[src].astype(np.int64)
-        bounds, _ = plan_edge_chunks(reps, self.max_wedge_chunk)
-        cum = np.concatenate([[0], np.cumsum(reps)])
-        peak = max(int(cum[end] - cum[start]) for start, end in bounds)
-        peak = max(peak, 1)
-        edges_per_chunk = max(end - start for start, end in bounds)
-
-        def gen():
-            if len(bounds) == 1:
-                # single full chunk: feed the device-resident CSR arrays
-                # directly — no host round-trip, no copies
-                yield csr.src, csr.col
-                return
-            dst = np.asarray(csr.col)
-            for start, end in bounds:
-                pad = edges_per_chunk - (end - start)
-                s, d = src[start:end], dst[start:end]
-                if pad:
-                    fill = np.full(pad, -1, np.int32)
-                    s = np.concatenate([s, fill])
-                    d = np.concatenate([d, fill])
-                yield s.astype(np.int32, copy=False), d.astype(np.int32, copy=False)
-
-        return gen(), len(bounds), peak, int(reps.sum())
+        """(src, dst) chunk stream under this counter's budget — the
+        engine-internal view of :func:`iter_wedge_chunks` (offsets
+        dropped; the global count/per-node scatters don't need them)."""
+        chunks, n_chunks, peak, total = iter_wedge_chunks(csr, self.max_wedge_chunk)
+        return ((s, d) for s, d, _ in chunks), n_chunks, peak, total
 
     def _record(self, method, n_chunks, peak, total_wedges, m_dir, resolved=None):
         self.last_stats = EngineStats(
@@ -472,7 +539,7 @@ class TriangleCounter:
         steps = self._search_steps(csr)
         running = np.uint64(0)
         for s, d in chunks:
-            partial = _chunk_count_kernel(
+            partial = chunk_count_kernel(
                 jnp.asarray(s), jnp.asarray(d),
                 csr.row_offsets, csr.col, csr.out_degree,
                 wedge_budget=peak, n_steps=steps,
@@ -486,7 +553,7 @@ class TriangleCounter:
         steps = self._search_steps(csr)
         out = np.zeros((csr.n_nodes,), np.int64)
         for s, d in chunks:
-            part = _chunk_per_node_kernel(
+            part = chunk_per_node_kernel(
                 jnp.asarray(s), jnp.asarray(d),
                 csr.row_offsets, csr.col, csr.out_degree,
                 wedge_budget=peak, n_steps=steps,

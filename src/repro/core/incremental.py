@@ -34,9 +34,9 @@ its three vertices in the ``S⁺`` scatter, ``[k = 1]`` in ``S⁻`` and
 same quantity computed with the roles of ``G⁻``/``G⁺`` swapped.
 
 Every probe pass runs the engine's own chunk kernel
-(:func:`repro.core.engine._chunk_per_node_kernel`; each closed wedge
+(:func:`repro.core.engine.chunk_per_node_kernel`; each closed wedge
 scatters +1 to exactly three vertices, so the hit total that
-``_chunk_count_kernel`` would compute falls out of the same launch as
+``chunk_count_kernel`` would compute falls out of the same launch as
 ``Σ per_node / 3``) on just the **delta wedge workload** —
 ``Σ_{(u,v) ∈ Δ} min(deg u, deg v)`` candidate slots (shorter-side
 enumeration) instead of the full graph's ``Σ deg⁺`` — and honors
@@ -65,7 +65,8 @@ import numpy as np
 
 from .engine import (
     TriangleCounter,
-    _chunk_per_node_kernel,
+    chunk_per_node_kernel,
+    next_pow2 as _next_pow2,
     plan_edge_chunks,
 )
 from repro.graphs.formats import validate_node_ids
@@ -79,10 +80,6 @@ _COL_PAD = np.int32(2**31 - 1)  # sorted-tail sentinel; never inside a row
 def _pack(u: np.ndarray, v: np.ndarray) -> np.ndarray:
     """Directed edge key u<<32|v (the §III-D2 packed-key representation)."""
     return u.astype(np.int64) << np.int64(32) | v.astype(np.int64)
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -372,7 +369,7 @@ class IncrementalTriangleCounter:
                 fill = np.full(pad, -1, np.int32)
                 s = np.concatenate([s, fill])
                 d = np.concatenate([d, fill])
-            pn = _chunk_per_node_kernel(
+            pn = chunk_per_node_kernel(
                 jnp.asarray(s), jnp.asarray(d), row_j, col_j, deg_j,
                 wedge_budget=eff, n_steps=n_steps,
             )

@@ -156,7 +156,15 @@ def main() -> None:
                          "memory-bounded edge partitioning")
     ap.add_argument("--baseline", action="store_true", help="also run NumPy CPU baseline")
     ap.add_argument("--distributed", action="store_true", help="shard over local devices")
-    ap.add_argument("--clustering", action="store_true")
+    ap.add_argument("--clustering", action="store_true",
+                    help="deprecated spelling of --transitivity")
+    ap.add_argument("--transitivity", action="store_true",
+                    help="also report the transitivity ratio (derived from "
+                         "the count and wedge total already in hand — free)")
+    ap.add_argument("--clustering-summary", action="store_true",
+                    help="also report average clustering + the degree-binned "
+                         "clustering profile (one extra per-node pass over "
+                         "the same CSR; no second ingest/preprocess)")
     ap.add_argument("--json", action="store_true",
                     help="print one machine-readable JSON object on stdout "
                          "(progress lines go to stderr)")
@@ -185,8 +193,19 @@ def main() -> None:
         mesh = make_local_mesh()
     tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk,
                          mesh=mesh)
+    count_input = graph
+    if args.clustering_summary:
+        # normalize to an OrientedCSR once up front so the count and the
+        # extra per-node pass share it — no second ingest/preprocess
+        # (`graph` itself stays untouched: the --baseline path needs the
+        # raw edge array / CSRGraph, not the oriented NamedTuple)
+        from repro.core import prepare_oriented
+
+        csr = prepare_oriented(graph)
+        if csr is not None:
+            count_input = csr
     t0 = time.time()
-    t = tc.count(graph)
+    t = tc.count(count_input)
     dt = time.time() - t0
     es = tc.last_stats
     log(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
@@ -210,11 +229,31 @@ def main() -> None:
         assert tb == t
 
     trans = None
-    if args.clustering:
+    if args.clustering or args.transitivity or args.clustering_summary:
         # derive from the count and wedge total already in hand — no recount
         wedges = info["graph"]["total_wedges"]
         trans = 3.0 * t / wedges if wedges else 0.0
         log(f"transitivity = {trans:.4f}")
+
+    clustering_summary = None
+    if args.clustering_summary:
+        from repro.analytics.metrics import (
+            clustering_from_counts,
+            profile_from_counts,
+        )
+        from repro.core import degree_histogram
+
+        t0 = time.time()
+        deg, _ = degree_histogram(count_input)
+        tri = tc.per_node(count_input)  # same CSR as the count — one extra pass
+        cc = clustering_from_counts(tri, deg)
+        cluster_s = time.time() - t0
+        clustering_summary = dict(
+            average=float(cc.mean()) if cc.size else 0.0,
+            profile=profile_from_counts(tri, deg),
+        )
+        log(f"avg clustering = {clustering_summary['average']:.4f} "
+            f"({cluster_s*1e3:.1f} ms)")
 
     if args.json:
         out = dict(
@@ -232,6 +271,7 @@ def main() -> None:
             source={k: v for k, v in info.items() if k != "graph"},
             timings_s=dict(build=build_s, count=dt, baseline=baseline_s),
             transitivity=trans,
+            clustering=clustering_summary,
         )
         print(json.dumps(out, indent=None, sort_keys=True))
 

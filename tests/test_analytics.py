@@ -1,0 +1,377 @@
+"""Analytics subsystem: per-edge support, k-truss, engine-routed metrics.
+
+The acceptance contract: per-edge support matches an O(m·dmax) NumPy
+reference and sums to 3×the triangle count bit-exactly at any
+``max_wedge_chunk`` budget; k-truss decomposition matches a naive
+recompute-peeling oracle on every test graph; the clustering/transitivity
+metrics agree with the historical ``repro.core.clustering`` results while
+now accepting cached CSRs and honoring the memory budget.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis; use the local stub
+    from _hypothesis_stub import given, settings, st
+
+from repro.analytics import (
+    average_clustering,
+    clustering_profile,
+    edge_support,
+    graph_report,
+    k_truss_decomposition,
+    k_truss_subgraph,
+    local_clustering,
+    top_support_edges,
+    top_triangle_nodes,
+    transitivity,
+)
+from repro.core import (
+    TriangleCounter,
+    count_triangles_numpy,
+    local_clustering_coefficient,
+    node_triangle_features,
+    prepare_oriented,
+)
+from repro.core import transitivity as core_transitivity
+from repro.graphs import canonicalize_edges, kronecker_rmat, watts_strogatz
+from repro.graphs.io import ingest
+from repro.graphs.io.registry import karate_edges
+
+DATA = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracles
+# ---------------------------------------------------------------------------
+
+
+def brute_support(edges):
+    """O(m·dmax) per-edge support on the forward orientation.
+
+    Returns {(u, v): support} keyed by the forward-oriented edge — the
+    same (deg, id)-lexicographic orientation the engine preprocessing
+    uses, so keys align with ``EdgeSupport.u``/``.v`` directly.
+    """
+    edges = np.asarray(edges)
+    n = int(edges.max()) + 1
+    deg = np.bincount(edges[:, 0], minlength=n)
+    adj = [set() for _ in range(n)]
+    for u, v in edges:
+        adj[u].add(int(v))
+    out = {}
+    for u, v in edges:
+        u, v = int(u), int(v)
+        if (deg[u], u) < (deg[v], v):
+            out[(u, v)] = len(adj[u] & adj[v])
+    return out
+
+
+def brute_truss(edges):
+    """Naive k-truss decomposition: recompute supports, peel, repeat."""
+    edges = np.asarray(edges)
+    alive = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in edges}
+    truss = {}
+    k = 3
+    while alive:
+        while True:
+            adj = {}
+            for u, v in alive:
+                adj.setdefault(u, set()).add(v)
+                adj.setdefault(v, set()).add(u)
+            peel = [(u, v) for u, v in alive if len(adj[u] & adj[v]) < k - 2]
+            if not peel:
+                break
+            for e in peel:
+                truss[e] = k - 1
+                alive.discard(e)
+            if not alive:
+                break
+        k += 1
+    return truss
+
+
+def support_as_dict(sup):
+    return {(int(u), int(v)): int(s) for u, v, s in zip(sup.u, sup.v, sup.support)}
+
+
+def truss_as_dict(dec):
+    return {
+        (min(int(u), int(v)), max(int(u), int(v))): int(t)
+        for u, v, t in zip(dec.u, dec.v, dec.trussness)
+    }
+
+
+def complete_graph(n):
+    return canonicalize_edges(
+        np.array([(i, j) for i in range(n) for j in range(i + 1, n)])
+    )
+
+
+@pytest.fixture(scope="module")
+def karate():
+    return canonicalize_edges(karate_edges())
+
+
+# ---------------------------------------------------------------------------
+# per-edge support
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budget", [None, 256, 17])
+def test_support_matches_bruteforce(small_graphs, budget):
+    for name, e in small_graphs.items():
+        sup = edge_support(e, max_wedge_chunk=budget)
+        assert support_as_dict(sup) == brute_support(e), (name, budget)
+
+
+def test_support_sum_is_three_times_count_at_two_budgets():
+    """The acceptance identity, chunked and unchunked, on a skewed graph."""
+    e = kronecker_rmat(10, seed=0)
+    expect = count_triangles_numpy(e)
+    unchunked = edge_support(e)
+    assert int(unchunked.support.sum()) == 3 * expect
+    total = unchunked.total_wedges
+    chunked = edge_support(e, max_wedge_chunk=max(total // 7, 1))
+    assert int(chunked.support.sum()) == 3 * expect
+    assert chunked.n_chunks >= 4
+    assert chunked.peak_wedge_buffer <= max(total // 7, 1)
+    np.testing.assert_array_equal(chunked.support, unchunked.support)
+
+
+def test_support_acceptance_identity_kron13():
+    """The PR acceptance criterion, verbatim: on Kronecker-13 the support
+    sum equals 3× the engine count bit-exactly at two different budgets."""
+    e = kronecker_rmat(13, seed=0)
+    tc = TriangleCounter()
+    expect = tc.count(e)
+    total = tc.last_stats.total_wedges
+    for budget in (max(total // 4, 1), max(total // 16, 1)):
+        sup = edge_support(e, max_wedge_chunk=budget)
+        assert int(sup.support.sum()) == 3 * expect, budget
+        assert sup.n_chunks > 1
+
+
+def test_support_karate_fixture(karate):
+    sup = edge_support(karate)
+    assert sup.n_edges == 78
+    assert sup.total_triangles() == 45
+    assert int(sup.support.sum()) == 135
+    assert int(sup.support.max()) == 10  # edge (32, 33) closes 10 triangles
+    u, v, s = sup.top_k(1)
+    assert (int(u[0]), int(v[0])) == (32, 33) and int(s[0]) == 10
+
+
+def test_support_accepts_cached_csr(karate):
+    """A .tricsr-cached CSRGraph and the raw edge array agree exactly."""
+    with tempfile.TemporaryDirectory() as tmp:
+        csr, _ = ingest(os.path.join(DATA, "karate.txt"), cache_dir=tmp)
+        from_cache = edge_support(csr)
+    from_edges = edge_support(karate)
+    assert support_as_dict(from_cache) == support_as_dict(from_edges)
+
+
+def test_support_accepts_oriented_csr(small_graphs):
+    e = small_graphs["er"]
+    csr = prepare_oriented(e)
+    np.testing.assert_array_equal(
+        edge_support(csr).support, edge_support(e).support
+    )
+
+
+def test_support_empty_graph():
+    sup = edge_support(np.zeros((0, 2), np.int32))
+    assert sup.n_edges == 0 and sup.total_triangles() == 0
+    assert sup.top_k(3)[0].shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# k-truss
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budget", [None, 64])
+def test_truss_matches_naive_oracle(small_graphs, budget):
+    for name, e in small_graphs.items():
+        dec = k_truss_decomposition(e, max_wedge_chunk=budget)
+        assert truss_as_dict(dec) == brute_truss(e), (name, budget)
+
+
+def test_truss_karate_fixture(karate):
+    dec = k_truss_decomposition(karate)
+    assert truss_as_dict(dec) == brute_truss(karate)
+    assert dec.max_k == 5  # the karate club's densest truss is the 5-truss
+    spectrum = dec.spectrum()
+    assert sum(spectrum.values()) == 78
+    assert spectrum[5] == 14
+    sizes = dec.truss_sizes()
+    assert sizes[2] == 78 and sizes[5] == 14
+    # monotone: the k-truss shrinks as k grows
+    assert all(sizes[k] >= sizes[k + 1] for k in range(2, dec.max_k))
+
+
+def test_truss_complete_graph():
+    """K_n is its own n-truss: every edge has support n-2."""
+    dec = k_truss_decomposition(complete_graph(6))
+    assert dec.max_k == 6
+    assert (dec.trussness == 6).all()
+
+
+def test_truss_triangle_free():
+    star = canonicalize_edges(np.array([(0, i) for i in range(1, 7)]))
+    dec = k_truss_decomposition(star)
+    assert dec.max_k == 2 and (dec.trussness == 2).all()
+    sub, k = k_truss_subgraph(star)
+    assert k == 2 and sub.shape[0] == 12  # the whole (canonical) graph
+
+
+def test_truss_budget_independent(karate):
+    base = truss_as_dict(k_truss_decomposition(karate))
+    for budget in [32, 101]:
+        assert truss_as_dict(k_truss_decomposition(karate, max_wedge_chunk=budget)) == base
+
+
+def test_truss_subgraph_extraction(karate):
+    sub, k = k_truss_subgraph(karate)
+    assert k == 5
+    # canonical form: both directions, sorted, and counting it stands alone
+    assert sub.shape == (28, 2)
+    tc = TriangleCounter()
+    assert tc.count(sub) == count_triangles_numpy(sub)
+    # every edge of the 5-truss has support >= 3 inside the subgraph
+    sup = edge_support(sub)
+    assert int(sup.support.min()) >= 3
+    # explicit k: the 4-truss contains the 5-truss
+    sub4, k4 = k_truss_subgraph(karate, k=4)
+    assert k4 == 4 and sub4.shape[0] >= sub.shape[0]
+
+
+def test_truss_accepts_cached_csr(karate):
+    with tempfile.TemporaryDirectory() as tmp:
+        csr, _ = ingest(os.path.join(DATA, "karate.txt"), cache_dir=tmp)
+        dec = k_truss_decomposition(csr)
+    assert truss_as_dict(dec) == brute_truss(karate)
+
+
+def test_truss_empty_graph():
+    dec = k_truss_decomposition(np.zeros((0, 2), np.int32))
+    assert dec.max_k == 0 and dec.n_edges == 0 and dec.spectrum() == {}
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis / stub)
+# ---------------------------------------------------------------------------
+
+
+def _random_graph(rnd, n_max=24, m_max=60):
+    n = rnd.randint(3, n_max)
+    m = rnd.randint(0, m_max)
+    pairs = [(rnd.randint(0, n - 1), rnd.randint(0, n - 1)) for _ in range(m)]
+    pairs = [(u, v) for u, v in pairs if u != v]
+    if not pairs:
+        return np.zeros((0, 2), np.int32)
+    return canonicalize_edges(np.array(pairs, np.int32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.randoms())
+def test_property_support_identity_and_truss_oracle(rnd):
+    """Random small graphs: Σ support = 3·T at two budgets; the engine
+    peel matches the naive oracle (peel order cannot matter)."""
+    e = _random_graph(rnd)
+    if e.shape[0] == 0:
+        assert edge_support(e).n_edges == 0
+        return
+    expect = count_triangles_numpy(e)
+    for budget in [None, 16]:
+        sup = edge_support(e, max_wedge_chunk=budget)
+        assert int(sup.support.sum()) == 3 * expect
+        assert support_as_dict(sup) == brute_support(e)
+    dec = k_truss_decomposition(e, max_wedge_chunk=16)
+    assert truss_as_dict(dec) == brute_truss(e)
+
+
+# ---------------------------------------------------------------------------
+# metrics routed through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_match_core_wrappers(small_graphs):
+    for e in small_graphs.values():
+        np.testing.assert_allclose(
+            local_clustering(e), np.asarray(local_clustering_coefficient(e))
+        )
+        assert abs(transitivity(e) - core_transitivity(e)) < 1e-12
+
+
+def test_core_clustering_now_honors_budget(small_graphs):
+    """The historical signatures accept max_wedge_chunk and still agree."""
+    e = small_graphs["kron"]
+    base = np.asarray(local_clustering_coefficient(e))
+    chunked = np.asarray(local_clustering_coefficient(e, max_wedge_chunk=64))
+    np.testing.assert_allclose(base, chunked)
+    assert abs(
+        core_transitivity(e, max_wedge_chunk=64) - core_transitivity(e)
+    ) < 1e-12
+
+
+def test_core_clustering_accepts_cached_csr(karate):
+    with tempfile.TemporaryDirectory() as tmp:
+        csr, _ = ingest(os.path.join(DATA, "karate.txt"), cache_dir=tmp)
+        from_cache = np.asarray(local_clustering_coefficient(csr))
+        feats = np.asarray(node_triangle_features(csr))
+    np.testing.assert_allclose(
+        from_cache, np.asarray(local_clustering_coefficient(karate))
+    )
+    assert feats.shape == (34, 3)
+    assert abs(core_transitivity(karate) - 135.0 / 528.0) < 1e-12
+
+
+def test_transitivity_karate_exact(karate):
+    # 45 triangles, 528 wedges -> 135/528
+    assert abs(transitivity(karate) - 135.0 / 528.0) < 1e-12
+    assert abs(average_clustering(karate) - 0.5706384782076823) < 1e-9
+
+
+def test_clustering_profile_partitions_nodes(small_graphs):
+    e = small_graphs["ws"]
+    n = int(e.max()) + 1
+    prof = clustering_profile(e)
+    assert sum(prof["n_nodes"]) == n  # WS has no isolated nodes
+    assert len(prof["bins"]) == len(prof["mean_clustering"])
+    assert all(0.0 <= c <= 1.0 + 1e-9 for c in prof["mean_clustering"])
+
+
+def test_top_k_metrics(karate):
+    nodes, counts = top_triangle_nodes(karate, k=2)
+    assert list(nodes) == [0, 33] and list(counts) == [18, 15]
+    u, v, s = top_support_edges(karate, k=1)
+    assert (int(u[0]), int(v[0]), int(s[0])) == (32, 33, 10)
+
+
+def test_metrics_reuse_counter_stats(small_graphs):
+    """Passing counter= reuses the instance; last_stats reflects the call."""
+    e = small_graphs["kron"]
+    tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=128)
+    local_clustering(e, counter=tc)
+    assert tc.last_stats is not None
+    assert tc.last_stats.wedge_budget == 128
+    assert tc.last_stats.n_chunks > 1
+
+
+def test_graph_report_shape_and_consistency(karate):
+    rep = graph_report(karate, top_k=3, max_wedge_chunk=128)
+    assert rep["triangles"] == 45
+    assert rep["support"]["sum"] == 3 * rep["triangles"]
+    assert abs(rep["transitivity"] - 135.0 / 528.0) < 1e-12
+    assert rep["truss"]["max_k"] == 5
+    assert sum(rep["truss"]["spectrum"].values()) == rep["n_edges"] == 78
+    assert len(rep["clustering"]["top_nodes"]) == 3
+    assert set(rep["timings_s"]) >= {"preprocess", "count", "clustering", "support", "truss"}
+    # no-truss variant skips the peel
+    rep2 = graph_report(karate, include_truss=False)
+    assert "truss" not in rep2
