@@ -1,11 +1,14 @@
 """Analytics throughput: per-edge support, k-truss, engine clustering.
 
-Measures the new subsystem on the paper's Kronecker family at several
-``max_wedge_chunk`` budgets — the §Analytics table in EXPERIMENTS.md.
-Support and clustering run on Kronecker-12/13 (the support pass asserts
-the acceptance identity ``Σ support == 3·T`` bit-exactly at every
-budget); the k-truss peel — O(rounds) full support recomputes — runs on
-Kronecker-10 so the suite stays minutes, not hours, on CPU.
+Measures the analytics subsystem on the paper's Kronecker family at
+several ``max_wedge_chunk`` budgets **and across kernel backends**
+(wedge_bsearch / panel / pallas) — the §Analytics table in
+EXPERIMENTS.md.  Support and clustering run on Kronecker-12/13 (the
+support pass asserts the acceptance identity ``Σ support == 3·T``
+bit-exactly at every budget for every backend); the k-truss peel —
+O(rounds) full support recomputes, the heaviest repeated-support
+workload in the repo — runs on Kronecker-10 per backend so the suite
+stays minutes, not hours, on CPU.
 """
 from __future__ import annotations
 
@@ -19,6 +22,8 @@ from .common import timeit
 
 BUDGET_FRACTIONS = (1.0, 0.25, 0.0625)
 
+METHODS = ("wedge_bsearch", "panel", "pallas")
+
 
 def run():
     rows = []
@@ -30,16 +35,20 @@ def run():
         total = tc.last_stats.total_wedges
         for frac in BUDGET_FRACTIONS:
             budget = None if frac == 1.0 else max(int(total * frac), 1)
-            sup = edge_support(csr, max_wedge_chunk=budget)
-            assert int(sup.support.sum()) == 3 * expect, (scale, budget)
-            us = timeit(lambda: edge_support(csr, max_wedge_chunk=budget),
-                        warmup=0, iters=3)
-            rows.append((
-                f"analytics/support/kron{scale}/frac-{frac}",
-                us,
-                f"sum=3T={3*expect};chunks={sup.n_chunks};"
-                f"edges={sup.n_edges}",
-            ))
+            for method in METHODS:
+                sup = edge_support(csr, max_wedge_chunk=budget, method=method)
+                assert int(sup.support.sum()) == 3 * expect, (scale, budget, method)
+                assert sup.method == method, (sup.method, method)
+                us = timeit(
+                    lambda: edge_support(csr, max_wedge_chunk=budget, method=method),
+                    warmup=0, iters=3,
+                )
+                rows.append((
+                    f"analytics/support/kron{scale}/{method}/frac-{frac}",
+                    us,
+                    f"sum=3T={3*expect};chunks={sup.n_chunks};"
+                    f"edges={sup.n_edges}",
+                ))
             cc_tc = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
             us = timeit(lambda: cc_tc.clustering(csr), warmup=0, iters=3)
             rows.append((
@@ -48,26 +57,29 @@ def run():
                 f"chunks={cc_tc.last_stats.n_chunks};T={expect}",
             ))
     # k-truss: the iterative peel multiplies the support cost by the
-    # round count, so measure one decomposition per budget on kron10
+    # round count, so measure one decomposition per (backend, budget) on
+    # kron10 — every backend must produce the identical spectrum
     edges = kronecker_rmat(10, seed=0)
     csr = prepare_oriented(edges)
     probe = TriangleCounter(method="wedge_bsearch")
     probe.count(csr)
     total = probe.last_stats.total_wedges
     base = None
-    for frac in (1.0, 0.0625):
-        budget = None if frac == 1.0 else max(int(total * frac), 1)
-        t0 = time.perf_counter()  # single timed run; its result doubles
-        dec = k_truss_decomposition(csr, max_wedge_chunk=budget)
-        us = (time.perf_counter() - t0) * 1e6  # as the correctness probe
-        spec = dec.spectrum()
-        if base is None:
-            base = spec
-        assert spec == base, (frac, "truss result must be budget-independent")
-        rows.append((
-            f"analytics/truss/kron10/frac-{frac}",
-            us,
-            f"max_k={dec.max_k};rounds={dec.rounds};"
-            f"launches={dec.n_support_launches}",
-        ))
+    for method in METHODS:
+        for frac in (1.0, 0.0625):
+            budget = None if frac == 1.0 else max(int(total * frac), 1)
+            t0 = time.perf_counter()  # single timed run; its result doubles
+            dec = k_truss_decomposition(csr, max_wedge_chunk=budget, method=method)
+            us = (time.perf_counter() - t0) * 1e6  # as the correctness probe
+            spec = dec.spectrum()
+            if base is None:
+                base = spec
+            assert spec == base, (method, frac,
+                                  "truss must be backend/budget-independent")
+            rows.append((
+                f"analytics/truss/kron10/{method}/frac-{frac}",
+                us,
+                f"max_k={dec.max_k};rounds={dec.rounds};"
+                f"launches={dec.n_support_launches}",
+            ))
     return rows

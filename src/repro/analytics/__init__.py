@@ -39,7 +39,13 @@ cycle-safe.
 """
 import repro.core  # noqa: F401  (see note above — load order matters)
 
-from .support import EdgeSupport, chunk_support_kernel, edge_support, support_on_arrays
+from .support import (
+    EdgeSupport,
+    SupportRun,
+    chunk_support_kernel,
+    edge_support,
+    support_on_arrays,
+)
 from .truss import TrussDecomposition, k_truss_decomposition, k_truss_subgraph
 from .metrics import (
     average_clustering,
@@ -58,6 +64,7 @@ from .metrics import (
 
 __all__ = [
     "EdgeSupport",
+    "SupportRun",
     "chunk_support_kernel",
     "edge_support",
     "support_on_arrays",

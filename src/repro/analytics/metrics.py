@@ -231,10 +231,13 @@ def top_support_edges(
     k: int = 10,
     n_nodes: int | None = None,
     *,
+    method: str = "auto",
     max_wedge_chunk: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """The ``k`` most triangle-dense edges as ``(u, v, support)``."""
-    return edge_support(edges, n_nodes, max_wedge_chunk=max_wedge_chunk).top_k(k)
+    return edge_support(
+        edges, n_nodes, method=method, max_wedge_chunk=max_wedge_chunk
+    ).top_k(k)
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +259,9 @@ def graph_report(
     The input is normalized to an ``OrientedCSR`` up front
     (:func:`repro.core.engine.prepare_oriented`) and every stage —
     count, per-node scatter, per-edge support, truss peel — consumes
-    that CSR, so ingestion/preprocessing is never repeated.  Returns a
+    that CSR, so ingestion/preprocessing is never repeated.  ``method``
+    selects the kernel backend for *every* stage (support and truss
+    included — the panel/Pallas schedules are full citizens).  Returns a
     JSON-ready dict (plain ints/floats/lists) with per-stage timings.
     """
     t0 = time.perf_counter()
@@ -284,6 +289,7 @@ def graph_report(
         "peak_wedge_buffer": es.peak_wedge_buffer,
         "wedge_budget": es.wedge_budget,
         "total_wedges": es.total_wedges,
+        "fallback_reason": es.fallback_reason,
     }
 
     t0 = time.perf_counter()
@@ -307,6 +313,7 @@ def graph_report(
     t0 = time.perf_counter()
     sup = edge_support(
         csr if csr is not None else np.zeros((0, 2), np.int32),
+        method=method,
         max_wedge_chunk=max_wedge_chunk,
     )
     timings["support"] = time.perf_counter() - t0
@@ -315,6 +322,7 @@ def graph_report(
         "sum": int(sup.support.sum()),
         "max": int(sup.support.max()) if sup.n_edges else 0,
         "n_chunks": sup.n_chunks,
+        "method": sup.method,
         "top_edges": [
             {"u": int(a), "v": int(b), "support": int(s)}
             for a, b, s in zip(su, sv, ss)
@@ -326,6 +334,7 @@ def graph_report(
         dec = k_truss_decomposition(
             csr if csr is not None else np.zeros((0, 2), np.int32),
             max_wedge_chunk=max_wedge_chunk,
+            method=method,
         )
         timings["truss"] = time.perf_counter() - t0
         report["truss"] = {
@@ -333,6 +342,7 @@ def graph_report(
             "spectrum": {str(k): c for k, c in dec.spectrum().items()},
             "truss_sizes": {str(k): c for k, c in dec.truss_sizes().items()},
             "rounds": dec.rounds,
+            "method": dec.method,
         }
 
     report["timings_s"] = timings

@@ -1,4 +1,4 @@
-"""Per-edge triangle support (chunked, memory-bounded).
+"""Per-edge triangle support (chunked, memory-bounded, backend-routed).
 
 The *support* of an undirected edge ``{u, v}`` is the number of
 triangles that contain it — the per-edge analogue of the engine's
@@ -6,15 +6,17 @@ per-node incidences, and the quantity k-truss decomposition peels on.
 Under the forward orientation every triangle appears as exactly one
 closed wedge, whose three participating **directed edges** are the
 triangle's three edges: the base ``(u, v)``, the wedge arm ``(u, w)``
-and the closing edge ``(v, w)`` found by the binary search.  The
-support kernel therefore scatters each hit back to those three edge
-slots (:func:`repro.core.count.expand_and_close_wedges_indexed`), so
-``support.sum() == 3 × triangle_count`` bit-exactly at any budget.
+and the closing edge ``(v, w)``.  Each kernel backend bills every hit
+to those three edge slots — the wedge backend from the binary search's
+match indices (:func:`repro.core.engine.chunk_support_kernel`), the
+panel/Pallas backends from the equality tile's arm/closure axis
+reductions — so ``support.sum() == 3 × triangle_count`` bit-exactly at
+any budget **for every backend**.
 
-The kernel is jitted alongside the engine's
-:func:`repro.core.engine.chunk_count_kernel` /
-:func:`~repro.core.engine.chunk_per_node_kernel` and consumes the same
-chunk plan (:func:`repro.core.engine.plan_edge_chunks`): edge chunks
+Everything routes through the engine's backend registry
+(:func:`repro.core.engine.resolve_backend` / ``run_workload``): the
+``method`` knob selects ``wedge_bsearch`` / ``panel`` / ``pallas``
+exactly as on :class:`repro.core.engine.TriangleCounter`, edge chunks
 honor ``max_wedge_chunk``, device partials stay int32 (per-edge support
 is bounded by the max degree ≤ √(2m), far below 2³¹), and the running
 per-edge totals accumulate on host in int64.
@@ -22,43 +24,38 @@ per-edge totals accumulate on host in int64.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
+from typing import NamedTuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.count import expand_and_close_wedges_indexed
-from repro.core.engine import iter_wedge_chunks, prepare_oriented, search_steps
-from repro.core.preprocess import OrientedCSR
+from repro.core.engine import (
+    TriangleCounter,
+    chunk_support_kernel,
+    make_workload,
+    prepare_oriented,
+    resolve_backend,
+    resolve_method,
+    run_workload,
+)
 
-__all__ = ["EdgeSupport", "chunk_support_kernel", "edge_support", "support_on_arrays"]
+__all__ = [
+    "EdgeSupport",
+    "SupportRun",
+    "chunk_support_kernel",  # re-export: the kernel now lives in the engine
+    "edge_support",
+    "support_on_arrays",
+]
 
 
-@functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
-def chunk_support_kernel(
-    src_e, dst_e, edge_offset, row_offsets, col, out_deg, *, wedge_budget, n_steps
-):
-    """Per-directed-edge support contributed by one −1-padded edge chunk.
+class SupportRun(NamedTuple):
+    """Result + launch stats of one raw-arrays support computation."""
 
-    ``edge_offset`` (traced scalar — no recompile per chunk) is the
-    chunk's start index in the global directed edge list; the base
-    edge's local id shifts by it, while the arm (``uw``) and closure
-    (``vw``) indices from the wedge expansion are global already.
-    Returns an int32 vector over the full ``col`` axis.
-    """
-    hit, edge_id, uw_idx, vw_idx = expand_and_close_wedges_indexed(
-        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
-    )
-    inc = hit.astype(jnp.int32)
-    m_dir = col.shape[0]
-    uv_idx = jnp.clip(edge_offset + edge_id, 0, m_dir - 1)
-    out = jnp.zeros((m_dir,), jnp.int32)
-    out = out.at[uv_idx].add(inc)
-    out = out.at[uw_idx].add(inc)
-    out = out.at[vw_idx].add(inc)
-    return out
+    support: np.ndarray        # (m,) int64, aligned with the src/col arrays
+    n_chunks: int
+    peak_wedge_buffer: int
+    total_wedges: int
+    method: str                # backend that actually executed
+    fallback_reason: str | None
 
 
 def support_on_arrays(
@@ -70,49 +67,30 @@ def support_on_arrays(
     max_wedge_chunk: int | None = None,
     n_steps: int | None = None,
     bucket_pow2: bool = False,
-):
+    method: str = "wedge_bsearch",
+    tuner=None,
+) -> SupportRun:
     """Per-directed-edge support over raw oriented-CSR arrays.
 
     The low-level entry the truss peeler drives round after round:
     ``src``/``col`` may carry a −1-padded tail (pow2 shape bucketing —
     padded slots produce zero support and are sliced off by the caller).
-    Chunk planning, padding and pow2 bucketing are all the engine's
-    (:func:`repro.core.engine.iter_wedge_chunks`) — this function only
-    adds the per-chunk support scatter and the int64 accumulation.
-
-    Returns ``(support, n_chunks, peak_wedge_buffer, total_wedges)``
-    with ``support`` an int64 host array aligned with ``src``.
+    ``method`` picks the kernel backend (``"auto"`` resolves against the
+    out-degree histogram); planning, padding and pow2 bucketing are the
+    backend's — this function only adds the int64 accumulation.
     """
     src_np = np.asarray(src)
-    m = src_np.shape[0]
-    if m == 0:
-        return np.zeros((0,), np.int64), 0, 0, 0
-    out_deg_np = np.asarray(out_degree)
-    if n_steps is None:
-        max_deg = int(out_deg_np.max()) if out_deg_np.size else 0
-        n_steps = max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
-    # OrientedCSR as a plain array container; `degree` (undirected) is
-    # not meaningful for a peeled subgraph and unused by the chunker and
-    # the kernel, so the out-degree stands in
-    chunk_csr = OrientedCSR(
-        row_offsets=np.asarray(row_offsets), src=src_np,
-        col=np.asarray(col), out_degree=out_deg_np, degree=out_deg_np,
+    if src_np.shape[0] == 0:
+        return SupportRun(np.zeros((0,), np.int64), 0, 0, 0, "wedge_bsearch", None)
+    resolved = resolve_method(method, out_degree)
+    backend, executed, reason = resolve_backend(resolved, "support", tuner=tuner)
+    work = make_workload(row_offsets, col, out_degree, src, col, n_steps=n_steps)
+    sup, plan = run_workload(
+        backend, "support", work, budget=max_wedge_chunk, bucket_pow2=bucket_pow2
     )
-    chunks, n_chunks, peak, total_wedges = iter_wedge_chunks(
-        chunk_csr, max_wedge_chunk, bucket_pow2=bucket_pow2
+    return SupportRun(
+        sup, plan.n_chunks, plan.peak_buffer, plan.total_wedges, executed, reason
     )
-    ro_dev = jnp.asarray(chunk_csr.row_offsets)
-    col_dev = jnp.asarray(chunk_csr.col)
-    od_dev = jnp.asarray(out_deg_np)
-    total = np.zeros((m,), np.int64)
-    for s, d, start in chunks:
-        part = chunk_support_kernel(
-            jnp.asarray(s), jnp.asarray(d), np.int32(start),
-            ro_dev, col_dev, od_dev,
-            wedge_budget=peak, n_steps=n_steps,
-        )
-        total += np.asarray(part, dtype=np.int64)
-    return total, n_chunks, peak, total_wedges
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,7 +100,10 @@ class EdgeSupport:
     ``(u[i], v[i])`` is directed edge ``i`` of the oriented CSR (one
     entry per undirected edge); ``support[i]`` is the number of
     triangles containing it.  The trailing fields mirror
-    :class:`repro.core.engine.EngineStats` for tuning/benchmarks.
+    :class:`repro.core.engine.EngineStats` for tuning/benchmarks —
+    ``method`` is the backend that actually executed (never "auto"),
+    with ``fallback_reason`` set iff a capability gap forced a
+    substitution.
     """
 
     u: np.ndarray              # (m,) int32 forward-edge sources
@@ -133,6 +114,8 @@ class EdgeSupport:
     peak_wedge_buffer: int
     wedge_budget: int | None
     total_wedges: int
+    method: str = "wedge_bsearch"
+    fallback_reason: str | None = None
 
     @property
     def n_edges(self) -> int:
@@ -151,34 +134,54 @@ class EdgeSupport:
         return self.u[order], self.v[order], self.support[order]
 
 
-def edge_support(edges, n_nodes: int | None = None, *, max_wedge_chunk: int | None = None) -> EdgeSupport:
+def edge_support(
+    edges,
+    n_nodes: int | None = None,
+    *,
+    max_wedge_chunk: int | None = None,
+    method: str = "auto",
+    counter: TriangleCounter | None = None,
+) -> EdgeSupport:
     """Per-edge triangle support for any engine-accepted graph input.
 
     ``edges`` may be a canonical edge array, an ``OrientedCSR``, or a
     cached undirected CSR (``repro.graphs.io.CSRGraph``) — the same
     front door as :meth:`repro.core.engine.TriangleCounter.count`, via
-    :func:`repro.core.engine.prepare_oriented`.
+    :func:`repro.core.engine.prepare_oriented`.  ``method`` selects the
+    kernel backend exactly as on the engine; pass ``counter=`` to reuse
+    a configured :class:`TriangleCounter` (its ``last_stats`` reflect
+    the call).  ``counter=`` carries its own method/budget, so combining
+    it with an explicit ``method``/``max_wedge_chunk`` is rejected
+    rather than silently ignored.
     """
+    if counter is not None and (method != "auto" or max_wedge_chunk is not None):
+        raise ValueError(
+            "pass either counter= (which carries its own method/budget) or "
+            "method=/max_wedge_chunk=, not both"
+        )
+    tc = counter if counter is not None else TriangleCounter(
+        method=method, max_wedge_chunk=max_wedge_chunk
+    )
     csr = prepare_oriented(edges, n_nodes)
     if csr is None:
         n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
         empty32 = np.zeros((0,), np.int32)
         return EdgeSupport(
             u=empty32, v=empty32, support=np.zeros((0,), np.int64), n_nodes=n,
-            n_chunks=0, peak_wedge_buffer=0, wedge_budget=max_wedge_chunk,
+            n_chunks=0, peak_wedge_buffer=0, wedge_budget=tc.max_wedge_chunk,
             total_wedges=0,
         )
-    sup, n_chunks, peak, total = support_on_arrays(
-        csr.row_offsets, csr.src, csr.col, csr.out_degree,
-        max_wedge_chunk=max_wedge_chunk, n_steps=search_steps(csr),
-    )
+    sup = tc.edge_support(csr)
+    st = tc.last_stats
     return EdgeSupport(
         u=np.asarray(csr.src, dtype=np.int32),
         v=np.asarray(csr.col, dtype=np.int32),
         support=sup,
         n_nodes=csr.n_nodes,
-        n_chunks=n_chunks,
-        peak_wedge_buffer=peak,
-        wedge_budget=max_wedge_chunk,
-        total_wedges=total,
+        n_chunks=st.n_chunks,
+        peak_wedge_buffer=st.peak_wedge_buffer,
+        wedge_budget=st.wedge_budget,
+        total_wedges=st.total_wedges,
+        method=st.method,
+        fallback_reason=st.fallback_reason,
     )

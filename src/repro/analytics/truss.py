@@ -23,6 +23,11 @@ Two engine-minded details:
   (``support_on_arrays(bucket_pow2=True)``), so a full decomposition
   compiles O(log m) kernels regardless of round count.  The chunk plan
   still honors ``max_wedge_chunk`` within each round.
+* **backend-routed support.**  Every peel round's support recompute
+  runs through the engine's kernel backend registry, so ``method=``
+  selects wedge / panel / Pallas for the heaviest repeated-support
+  workload in the repo.  The spectrum is backend-independent bit-exactly
+  (each backend bills the identical three edges per triangle).
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.engine import next_pow2, prepare_oriented, search_steps
+from repro.core.engine import next_pow2, prepare_oriented, resolve_method, search_steps
 
 from .support import support_on_arrays
 
@@ -53,6 +58,7 @@ class TrussDecomposition:
     n_nodes: int
     rounds: int             # support-recompute rounds the peel ran
     n_support_launches: int  # chunk-kernel launches across all rounds
+    method: str = "wedge_bsearch"  # backend the support recomputes executed
 
     @property
     def n_edges(self) -> int:
@@ -91,13 +97,20 @@ def _empty_result(n_nodes: int) -> TrussDecomposition:
 
 
 def k_truss_decomposition(
-    edges, n_nodes: int | None = None, *, max_wedge_chunk: int | None = None
+    edges,
+    n_nodes: int | None = None,
+    *,
+    max_wedge_chunk: int | None = None,
+    method: str = "auto",
 ) -> TrussDecomposition:
     """Full truss decomposition (per-edge trussness) of a graph.
 
     Accepts the engine's input kinds (edge array / ``OrientedCSR`` /
     cached ``CSRGraph``); ``max_wedge_chunk`` bounds every support
-    recomputation's device wedge buffer exactly as in the engine.
+    recomputation's device wedge buffer exactly as in the engine, and
+    ``method`` picks the kernel backend every peel round's support runs
+    on (``"auto"`` resolves once, against the *full* graph's degrees, so
+    the whole peel shares one backend and its compiled kernels).
     """
     csr = prepare_oriented(edges, n_nodes)
     if csr is None:
@@ -111,9 +124,12 @@ def k_truss_decomposition(
     # under peeling and extra steps are harmless, so every round shares
     # one static n_steps (compile stability)
     steps = search_steps(csr)
+    method = resolve_method(method, csr.out_degree)
     trussness = np.full(m, 2, np.int32)
     idx = np.arange(m)
-    sup, launches, _, _ = _alive_support(src0, col0, idx, n, steps, max_wedge_chunk)
+    sup, launches, executed = _alive_support(
+        src0, col0, idx, n, steps, max_wedge_chunk, method
+    )
     rounds = 1
     k = 3
     while idx.size:
@@ -126,8 +142,8 @@ def k_truss_decomposition(
             if idx.size == 0:
                 break
             # removal may cascade: recompute support on the shrunk graph
-            sup, n_chunks, _, _ = _alive_support(
-                src0, col0, idx, n, steps, max_wedge_chunk
+            sup, n_chunks, executed = _alive_support(
+                src0, col0, idx, n, steps, max_wedge_chunk, method
             )
             rounds += 1
             launches += n_chunks
@@ -137,10 +153,11 @@ def k_truss_decomposition(
         u=src0, v=col0, trussness=trussness,
         max_k=int(trussness.max()) if m else 0,
         n_nodes=n, rounds=rounds, n_support_launches=launches,
+        method=executed,
     )
 
 
-def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk):
+def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk, method):
     """Support of the surviving edges, on the filtered (pow2-padded) CSR."""
     sub_src = src0[idx]
     sub_col = col0[idx]
@@ -152,11 +169,12 @@ def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk):
         fill = np.full(m_pad - idx.shape[0], -1, np.int32)
         sub_src = np.concatenate([sub_src, fill])
         sub_col = np.concatenate([sub_col, fill])
-    sup, n_chunks, peak, total = support_on_arrays(
+    run = support_on_arrays(
         sub_row, sub_src, sub_col, sub_out,
         max_wedge_chunk=max_wedge_chunk, n_steps=steps, bucket_pow2=True,
+        method=method,
     )
-    return sup[: idx.shape[0]], n_chunks, peak, total
+    return run.support[: idx.shape[0]], run.n_chunks, run.method
 
 
 def k_truss_subgraph(
@@ -165,6 +183,7 @@ def k_truss_subgraph(
     n_nodes: int | None = None,
     *,
     max_wedge_chunk: int | None = None,
+    method: str = "auto",
 ) -> tuple[np.ndarray, int]:
     """Extract the k-truss as a canonical edge array.
 
@@ -176,7 +195,9 @@ def k_truss_subgraph(
     dec = (
         edges
         if isinstance(edges, TrussDecomposition)
-        else k_truss_decomposition(edges, n_nodes, max_wedge_chunk=max_wedge_chunk)
+        else k_truss_decomposition(
+            edges, n_nodes, max_wedge_chunk=max_wedge_chunk, method=method
+        )
     )
     if dec.n_edges == 0:
         return np.zeros((0, 2), np.int32), 0

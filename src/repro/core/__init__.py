@@ -30,6 +30,7 @@ from .engine import (
     TriangleCounter,
     EngineStats,
     choose_method,
+    resolve_method,
     plan_edge_chunks,
     accumulate_partials,
     prepare_oriented,
@@ -38,7 +39,20 @@ from .engine import (
     iter_wedge_chunks,
     chunk_count_kernel,
     chunk_per_node_kernel,
+    chunk_support_kernel,
+    KernelBackend,
+    WedgeBackend,
+    PanelBackend,
+    PallasBackend,
+    DistributedBackend,
+    register_backend,
+    make_backend,
+    resolve_backend,
+    make_workload,
+    workload_from_csr,
+    run_workload,
 )
+from .tuning import AutoTuner, TileCache
 from .count import (
     WedgePlan,
     make_wedge_plan,
@@ -75,6 +89,7 @@ __all__ = [
     "TriangleCounter",
     "EngineStats",
     "choose_method",
+    "resolve_method",
     "plan_edge_chunks",
     "accumulate_partials",
     "prepare_oriented",
@@ -83,6 +98,20 @@ __all__ = [
     "iter_wedge_chunks",
     "chunk_count_kernel",
     "chunk_per_node_kernel",
+    "chunk_support_kernel",
+    "KernelBackend",
+    "WedgeBackend",
+    "PanelBackend",
+    "PallasBackend",
+    "DistributedBackend",
+    "register_backend",
+    "make_backend",
+    "resolve_backend",
+    "make_workload",
+    "workload_from_csr",
+    "run_workload",
+    "AutoTuner",
+    "TileCache",
     "OrientedCSR",
     "preprocess",
     "preprocess_host_offload",

@@ -53,7 +53,10 @@ __all__ = [
     "per_node_triangles",
     "bucketize_edges",
     "gather_panels",
+    "gather_panels_arrays",
     "panel_intersect_count",
+    "panel_intersect_per_node",
+    "panel_intersect_support",
 ]
 
 
@@ -304,6 +307,36 @@ def gather_panels(csr: OrientedCSR, edge_idx: jax.Array, width: int):
     return a, b, a_len, b_len
 
 
+@functools.partial(jax.jit, static_argnames=("width",))
+def gather_panels_arrays(row_offsets, col, out_degree, u, v, width: int):
+    """Gather fixed-width neighbor panels for arbitrary ``(u, v)`` pairs.
+
+    The raw-arrays generalization of :func:`gather_panels`: instead of
+    indexing a CSR's own directed edge list, the query endpoints are
+    given directly, so the same gather serves the engine's directed-edge
+    workload, the truss peel's filtered sub-CSRs and the incremental
+    service's probe pairs against an *undirected* adjacency.  ``u``/``v``
+    slots holding −1 (chunk padding) yield all-(−1) panel rows with zero
+    lengths, which every intersect kernel counts as zero.
+    """
+    valid = (u >= 0) & (v >= 0)
+    safe_u = jnp.maximum(u, 0)
+    safe_v = jnp.maximum(v, 0)
+    lane = jnp.arange(width, dtype=jnp.int32)
+    m_dir = col.shape[0]
+
+    def panel(base, length):
+        idx = jnp.clip(base[:, None] + lane[None, :], 0, m_dir - 1)
+        vals = col[idx]
+        return jnp.where(lane[None, :] < length[:, None], vals, -1)
+
+    a_len = jnp.where(valid, out_degree[safe_u], 0)
+    b_len = jnp.where(valid, out_degree[safe_v], 0)
+    a = panel(row_offsets[safe_u], a_len)
+    b = panel(row_offsets[safe_v], b_len)
+    return a, b, a_len, b_len
+
+
 @jax.jit
 def panel_intersect_count(a: jax.Array, b: jax.Array) -> jax.Array:
     """Sorted-set intersection sizes via all-pairs equality (jnp oracle).
@@ -315,6 +348,37 @@ def panel_intersect_count(a: jax.Array, b: jax.Array) -> jax.Array:
     eq = a[:, :, None] == b[:, None, :]
     valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
     return jnp.sum(eq & valid, axis=(1, 2), dtype=jnp.int32)
+
+
+@jax.jit
+def panel_intersect_per_node(a: jax.Array, b: jax.Array):
+    """(count, arm) jnp oracle — the per-node reduction of the eq cube.
+
+    ``arm[i, j]`` counts matches of ``a[i, j]`` inside row ``b[i]`` (0 on
+    padding), so scattering ``count`` to the edge endpoints and ``arm``
+    to the ``a`` *values* yields per-node triangle incidences.  The
+    Pallas rendition is ``intersect_per_node_pallas``.
+    """
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    arm = jnp.sum(eq & valid, axis=2, dtype=jnp.int32)
+    return jnp.sum(arm, axis=1, dtype=jnp.int32), arm
+
+
+@jax.jit
+def panel_intersect_support(a: jax.Array, b: jax.Array):
+    """(count, arm, closure) jnp oracle — the full support attribution.
+
+    ``closure[i, k]`` counts matches of ``b[i, k]`` inside row ``a[i]``;
+    together with ``arm`` every hit is billed to the triangle's three
+    directed edges.  The Pallas rendition is ``intersect_support_pallas``.
+    """
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    masked = eq & valid
+    arm = jnp.sum(masked, axis=2, dtype=jnp.int32)
+    closure = jnp.sum(masked, axis=1, dtype=jnp.int32)
+    return jnp.sum(arm, axis=1, dtype=jnp.int32), arm, closure
 
 
 def _count_panel(csr: OrientedCSR, kernel=None) -> int:

@@ -9,7 +9,37 @@ behind one front door::
     tc = TriangleCounter(method="auto", max_wedge_chunk=1 << 22)
     t  = tc.count(edges)          # exact global count (host int, uint64-safe)
     pn = tc.per_node(edges)       # per-vertex triangle incidences
+    es = tc.edge_support(edges)   # per-directed-edge triangle support
     cc = tc.clustering(edges)     # local clustering coefficients
+
+Kernel backend registry
+=======================
+
+Every workload — global count, per-node incidences, per-edge support —
+executes through a :class:`KernelBackend` registered per schedule name
+(:func:`register_backend` / :func:`make_backend`).  A backend owns its
+*planning* (how a query edge list is cut into budget-obeying chunks) and
+its three chunk kernels:
+
+``count_chunk``     → int32 device partials (uint64-accumulated on host)
+``per_node_chunk``  → per-vertex int32 scatter for one chunk
+``support_chunk``   → per-directed-edge int32 scatter for one chunk
+
+:class:`WedgeBackend` plans fan-out-bounded contiguous edge chunks and
+runs the batched-binary-search wedge kernels; :class:`PanelBackend`
+(``"panel"``) buckets edges by neighbor-panel width and runs the jnp
+equality-tile reductions; :class:`PallasBackend` (``"pallas"``) is the
+same plan driving the Pallas kernel family
+(:mod:`repro.kernels.triangle_count`), optionally steered by a
+:class:`repro.core.tuning.AutoTuner`; ``"distributed"`` supports only
+``count`` (the §III-E striping) — any other workload falls back to the
+wedge backend with an explicit ``EngineStats.fallback_reason`` and a
+one-time ``RuntimeWarning`` instead of a silent substitution.
+
+The shared driver (:func:`run_workload`) is what the analytics
+subsystem (per-edge support, k-truss peeling) and the incremental
+service route through as well, so the Pallas fast path serves every
+workload, not just scalar counts.
 
 The headline capability is **memory-bounded edge partitioning** — the
 reproduction of the paper's "larger than device memory" discipline.  The
@@ -46,16 +76,17 @@ Knob → paper-section map
     TPU analogue of the paper's warp-size tuning (§III-D5).  Wedge chunking
     wraps the bucket loop: each bucket is processed in slices of
     ``max_wedge_chunk // width`` edges so panel gathers respect the same
-    budget.
+    budget.  Degrees beyond the last rung extend the ladder instead of
+    failing.
 ``mesh``
     A ``jax.sharding.Mesh`` enabling the §III-E multi-device scheme; the
     edge chunking composes with the round-robin striping in
     :mod:`repro.core.distributed` (chunks slice the striped per-shard
     edge axis, so every device's buffer stays within budget).
-``block_edges``
-    (Pallas kernel tile height, chosen inside
-    :mod:`repro.kernels.triangle_count`) — the §III-D5 thread-block
-    sizing; see EXPERIMENTS.md §Perf for the sweep.
+``tuner``
+    A :class:`repro.core.tuning.AutoTuner` steering the Pallas kernels'
+    ``(block_edges, TLv)`` tiles from its per-shape grid-search cache —
+    the persisted form of the paper's §III-D5 sweep.
 
 Scheduling heuristics (``method="auto"``) follow §III-C's skew
 discussion: low max out-degree and low skew favor the panel equality
@@ -67,16 +98,20 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
+from typing import Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .count import (
-    bucketize_edges,
     expand_and_close_wedges,
-    gather_panels,
+    expand_and_close_wedges_indexed,
+    gather_panels_arrays,
     panel_intersect_count,
+    panel_intersect_per_node,
+    panel_intersect_support,
     segmented_int32_sum,
 )
 from .preprocess import OrientedCSR, oriented_from_undirected_csr, preprocess
@@ -94,10 +129,27 @@ __all__ = [
     "iter_wedge_chunks",
     "chunk_count_kernel",
     "chunk_per_node_kernel",
+    "chunk_support_kernel",
+    "KernelBackend",
+    "WedgeBackend",
+    "PanelBackend",
+    "PallasBackend",
+    "DistributedBackend",
+    "register_backend",
+    "make_backend",
+    "resolve_backend",
+    "Workload",
+    "make_workload",
+    "workload_from_csr",
+    "WorkPlan",
+    "run_workload",
     "METHODS",
+    "CAPABILITIES",
 ]
 
 METHODS = ("auto", "wedge_bsearch", "panel", "pallas", "distributed")
+
+CAPABILITIES = ("count", "per_node", "support")
 
 DEFAULT_WIDTHS = (16, 64, 256, 1024, 4096)
 
@@ -160,11 +212,12 @@ class EngineStats:
     """What the last engine call actually did (for tests and tuning).
 
     ``resolved_method`` is what configuration + ``"auto"`` dispatch chose;
-    ``method`` is what actually executed.  They differ only where the
-    engine has a single implementation and silently falls back — e.g.
-    :meth:`TriangleCounter.per_node` always runs the wedge schedule, so a
-    ``method="panel"`` counter reports ``resolved_method="panel"``,
-    ``method="wedge_bsearch"`` there.  ``peak_wedge_buffer`` is the
+    ``method`` is what actually executed.  They differ only when the
+    resolved backend lacks the requested workload capability — e.g. the
+    ``distributed`` backend has no per-node kernel — in which case the
+    engine runs the wedge backend and says so: ``fallback_reason`` holds
+    the human-readable why (and a one-time ``RuntimeWarning`` fires), so
+    capability gaps are never silent.  ``peak_wedge_buffer`` is the
     largest buffer a launch actually materialized (the max chunk load) —
     not the requested budget, which lives in ``wedge_budget``.
     """
@@ -176,6 +229,7 @@ class EngineStats:
     wedge_budget: int | None     # requested budget (None = unbounded)
     total_wedges: int            # Σ fan-out over all directed edges
     n_directed_edges: int
+    fallback_reason: str | None = None  # why method != resolved_method
 
 
 # ---------------------------------------------------------------------------
@@ -219,9 +273,73 @@ def chunk_per_node_kernel(src_e, dst_e, row_offsets, col, out_deg, *, wedge_budg
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("wedge_budget", "n_steps"))
+def chunk_support_kernel(
+    src_e, dst_e, edge_offset, row_offsets, col, out_deg, *, wedge_budget, n_steps
+):
+    """Per-directed-edge support contributed by one −1-padded edge chunk.
+
+    ``edge_offset`` (traced scalar — no recompile per chunk) is the
+    chunk's start index in the global directed edge list; the base
+    edge's local id shifts by it, while the arm (``uw``) and closure
+    (``vw``) indices from the wedge expansion are global already.
+    Returns an int32 vector over the full ``col`` axis.
+    """
+    hit, edge_id, uw_idx, vw_idx = expand_and_close_wedges_indexed(
+        src_e, dst_e, row_offsets, col, out_deg, wedge_budget, n_steps
+    )
+    inc = hit.astype(jnp.int32)
+    m_dir = col.shape[0]
+    uv_idx = jnp.clip(edge_offset + edge_id, 0, m_dir - 1)
+    out = jnp.zeros((m_dir,), jnp.int32)
+    out = out.at[uv_idx].add(inc)
+    out = out.at[uw_idx].add(inc)
+    out = out.at[vw_idx].add(inc)
+    return out
+
+
 # legacy underscore names (pre-analytics); new code uses the public ones
 _chunk_count_kernel = chunk_count_kernel
 _chunk_per_node_kernel = chunk_per_node_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_out",))
+def _panel_scatter_per_node(u, v, a, count, arm, *, n_out):
+    """Scatter a panel chunk's (count, arm) outputs to per-vertex slots.
+
+    ``count`` bills each hit to the edge endpoints ``u``/``v``; ``arm``
+    bills it to the third vertex — the *values* of the ``a`` panel.  All
+    padding contributes zeros (count/arm are 0 there), so clipped
+    indices never corrupt real slots.
+    """
+    out = jnp.zeros((n_out,), jnp.int32)
+    out = out.at[jnp.clip(u, 0, n_out - 1)].add(jnp.where(u >= 0, count, 0))
+    out = out.at[jnp.clip(v, 0, n_out - 1)].add(jnp.where(v >= 0, count, 0))
+    out = out.at[jnp.clip(a, 0, n_out - 1)].add(arm)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("m_out",))
+def _panel_scatter_support(edge_idx, u, v, row_offsets, count, arm, closure, *, m_out):
+    """Scatter (count, arm, closure) to the three directed-edge slots.
+
+    Base ``(u, v)`` is the chunk's global query id; arm slot ``j`` is
+    directed edge ``row_offsets[u] + j`` (the wedge arm ``(u, w)``);
+    closure slot ``k`` is ``row_offsets[v] + k`` (the closing edge
+    ``(v, w)``).  Lanes past a row's true length carry zero counts, so
+    their clipped indices are harmless.
+    """
+    out = jnp.zeros((m_out,), jnp.int32)
+    out = out.at[jnp.clip(edge_idx, 0, m_out - 1)].add(
+        jnp.where(edge_idx >= 0, count, 0)
+    )
+    lane_u = jnp.arange(arm.shape[1], dtype=jnp.int32)
+    base_u = row_offsets[jnp.maximum(u, 0)][:, None]
+    out = out.at[jnp.clip(base_u + lane_u[None, :], 0, m_out - 1)].add(arm)
+    lane_v = jnp.arange(closure.shape[1], dtype=jnp.int32)
+    base_v = row_offsets[jnp.maximum(v, 0)][:, None]
+    out = out.at[jnp.clip(base_v + lane_v[None, :], 0, m_out - 1)].add(closure)
+    return out
 
 
 def search_steps(csr: OrientedCSR) -> int:
@@ -282,16 +400,451 @@ def next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
+# ---------------------------------------------------------------------------
+# workloads: the uniform "query edges vs adjacency" view every backend plans
+# ---------------------------------------------------------------------------
+
+
+class Workload(NamedTuple):
+    """One edge-query workload: query pairs closed against an adjacency.
+
+    ``(src_e[i], dst_e[i])`` is query edge ``i`` — the directed edge list
+    itself for the engine's count/per-node/support calls, a filtered
+    sub-CSR for the truss peel, or probe pairs against an *undirected*
+    packed adjacency for the incremental service.  −1 slots are padding.
+    ``row_offsets``/``col``/``out_degree`` describe the adjacency rows
+    the queries intersect.  The ``*_host`` fields are NumPy views used
+    for planning (the originals may live on device and are fed to the
+    kernels untouched).
+    """
+
+    row_offsets: object
+    col: object
+    out_degree: object
+    src_e: object
+    dst_e: object
+    src_host: np.ndarray
+    dst_host: np.ndarray
+    deg_host: np.ndarray
+    n_steps: int
+
+
+def make_workload(row_offsets, col, out_degree, src_e, dst_e, n_steps: int | None = None) -> Workload:
+    """Build a :class:`Workload` from raw (host or device) arrays."""
+    deg_host = np.asarray(out_degree)
+    if n_steps is None:
+        max_deg = int(deg_host.max()) if deg_host.size else 0
+        n_steps = max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
+    return Workload(
+        row_offsets, col, out_degree, src_e, dst_e,
+        np.asarray(src_e), np.asarray(dst_e), deg_host, n_steps,
+    )
+
+
+def workload_from_csr(csr: OrientedCSR) -> Workload:
+    """The engine's standard workload: every directed edge queries its CSR."""
+    return make_workload(
+        csr.row_offsets, csr.col, csr.out_degree, csr.src, csr.col,
+        n_steps=search_steps(csr),
+    )
+
+
+class _DeviceAdj(NamedTuple):
+    """Device-resident adjacency arrays shared by every chunk launch."""
+
+    row_offsets: jax.Array
+    col: jax.Array
+    out_degree: jax.Array
+    n_steps: int
+
+
+class WedgeChunk(NamedTuple):
+    """One −1-padded contiguous slice of the query edge list."""
+
+    src: object
+    dst: object
+    start: int    # offset into the global query list (support scatter)
+    buffer: int   # static wedge-buffer length for this launch
+
+
+class PanelChunk(NamedTuple):
+    """One width-bucket slice of the query edge list (−1 padded)."""
+
+    edge_idx: np.ndarray  # global query ids
+    u: np.ndarray
+    v: np.ndarray
+    width: int
+
+
+class WorkPlan(NamedTuple):
+    """A backend's chunking decision for one workload."""
+
+    chunks: Iterator
+    n_chunks: int
+    peak_buffer: int   # largest per-launch buffer (slots/elements)
+    total_wedges: int  # Σ fan-out over the query edges
+
+
+# ---------------------------------------------------------------------------
+# the backends
+# ---------------------------------------------------------------------------
+
+
+class KernelBackend:
+    """Protocol each registered schedule implements.
+
+    A backend owns chunk planning (:meth:`plan`) and the three chunk
+    kernels.  ``capabilities`` declares which workloads it can execute;
+    :func:`resolve_backend` substitutes the wedge backend (recording an
+    explicit fallback reason) for anything outside that set.
+    """
+
+    name: str = "abstract"
+    capabilities: frozenset = frozenset()
+
+    def plan(self, work: Workload, budget: int | None, *, bucket_pow2: bool = False) -> WorkPlan:
+        raise NotImplementedError
+
+    def count_chunk(self, adj: _DeviceAdj, chunk):
+        raise NotImplementedError
+
+    def per_node_chunk(self, adj: _DeviceAdj, chunk, n_out: int):
+        raise NotImplementedError
+
+    def support_chunk(self, adj: _DeviceAdj, chunk, m_out: int):
+        raise NotImplementedError
+
+
+class WedgeBackend(KernelBackend):
+    """The batched-binary-search wedge schedule (§II-C forward algorithm).
+
+    Plans greedy contiguous edge chunks whose wedge fan-out totals obey
+    the budget (:func:`plan_edge_chunks`); every chunk launches the same
+    jitted kernel at one static buffer shape.
+    """
+
+    name = "wedge_bsearch"
+    capabilities = frozenset(CAPABILITIES)
+
+    def plan(self, work: Workload, budget: int | None, *, bucket_pow2: bool = False) -> WorkPlan:
+        src, dst = work.src_host, work.dst_host
+        reps = np.where(
+            src >= 0, work.deg_host[np.maximum(src, 0)], 0
+        ).astype(np.int64)
+        bounds, _ = plan_edge_chunks(reps, budget)
+        cum = np.concatenate([[0], np.cumsum(reps)])
+        peak = max(int(cum[end] - cum[start]) for start, end in bounds)
+        peak = max(peak, 1)
+        edges_per_chunk = max(end - start for start, end in bounds)
+        if bucket_pow2:
+            peak = next_pow2(peak)
+            edges_per_chunk = next_pow2(edges_per_chunk)
+
+        def gen():
+            if len(bounds) == 1 and edges_per_chunk == src.shape[0]:
+                # single full chunk: feed the (possibly device-resident)
+                # arrays directly — no host round-trip, no copies
+                yield WedgeChunk(work.src_e, work.dst_e, 0, peak)
+                return
+            for start, end in bounds:
+                pad = edges_per_chunk - (end - start)
+                s, d = src[start:end], dst[start:end]
+                if pad:
+                    fill = np.full(pad, -1, np.int32)
+                    s = np.concatenate([s, fill])
+                    d = np.concatenate([d, fill])
+                yield WedgeChunk(
+                    s.astype(np.int32, copy=False),
+                    d.astype(np.int32, copy=False),
+                    start, peak,
+                )
+
+        return WorkPlan(gen(), len(bounds), peak, int(reps.sum()))
+
+    def count_chunk(self, adj, chunk):
+        return chunk_count_kernel(
+            jnp.asarray(chunk.src), jnp.asarray(chunk.dst),
+            adj.row_offsets, adj.col, adj.out_degree,
+            wedge_budget=chunk.buffer, n_steps=adj.n_steps,
+        )
+
+    def per_node_chunk(self, adj, chunk, n_out):
+        return chunk_per_node_kernel(
+            jnp.asarray(chunk.src), jnp.asarray(chunk.dst),
+            adj.row_offsets, adj.col, adj.out_degree,
+            wedge_budget=chunk.buffer, n_steps=adj.n_steps,
+        )
+
+    def support_chunk(self, adj, chunk, m_out):
+        return chunk_support_kernel(
+            jnp.asarray(chunk.src), jnp.asarray(chunk.dst), np.int32(chunk.start),
+            adj.row_offsets, adj.col, adj.out_degree,
+            wedge_budget=chunk.buffer, n_steps=adj.n_steps,
+        )
+
+
+class PanelBackend(KernelBackend):
+    """The bucketed fixed-width panel schedule (jnp equality tiles).
+
+    Plans width buckets (paper §III-D5 warp-size analogue) sliced under
+    ``budget // width`` rows each; chunk kernels gather neighbor panels
+    with XLA and reduce the broadcast-equality cube.  Degrees beyond the
+    configured ladder extend it by ×4 rungs instead of failing, so any
+    adjacency — including the incremental service's unoriented probe
+    rows — is servable.
+    """
+
+    name = "panel"
+    capabilities = frozenset(CAPABILITIES)
+
+    def __init__(self, widths=DEFAULT_WIDTHS, tuner=None):
+        self.widths = tuple(widths)
+        self.tuner = tuner
+
+    # intersect flavors — PallasBackend overrides with the kernel family
+    def intersect_count(self, a, b):
+        return panel_intersect_count(a, b)
+
+    def intersect_per_node(self, a, b):
+        return panel_intersect_per_node(a, b)
+
+    def intersect_support(self, a, b):
+        return panel_intersect_support(a, b)
+
+    def _ladder(self, max_need: int):
+        ws = list(self.widths)
+        while ws and ws[-1] < max_need:
+            ws.append(ws[-1] * 4)
+        return tuple(ws)
+
+    def plan(self, work: Workload, budget: int | None, *, bucket_pow2: bool = False) -> WorkPlan:
+        src, dst, deg = work.src_host, work.dst_host, work.deg_host
+        valid = (src >= 0) & (dst >= 0)
+        du = np.where(valid, deg[np.maximum(src, 0)], 0).astype(np.int64)
+        dv = np.where(valid, deg[np.maximum(dst, 0)], 0).astype(np.int64)
+        need = np.maximum(du, dv)
+        total_wedges = int(du.sum())
+
+        def take(arr, sl):
+            return np.where(sl >= 0, arr[np.maximum(sl, 0)], -1).astype(np.int32)
+
+        chunks: list[PanelChunk] = []
+        peak = 0
+        lo = 0
+        for w in self._ladder(int(need.max()) if need.size else 0):
+            mask = (need > lo) & (need <= w)
+            lo = w
+            idx = np.nonzero(mask)[0].astype(np.int32)
+            if not idx.size:
+                continue
+            per = len(idx) if budget is None else max(1, int(budget) // w)
+            n_slices = -(-len(idx) // per)
+            for s in range(0, len(idx), per):
+                sl = idx[s : s + per]
+                rows = per if n_slices > 1 else len(sl)
+                if bucket_pow2:
+                    rows = next_pow2(rows)
+                pad = rows - len(sl)
+                if pad:
+                    sl = np.concatenate([sl, np.full(pad, -1, np.int32)])
+                chunks.append(PanelChunk(sl, take(src, sl), take(dst, sl), w))
+                peak = max(peak, rows * w)
+
+        return WorkPlan(iter(chunks), len(chunks), peak, total_wedges)
+
+    def _gather(self, adj, chunk):
+        return gather_panels_arrays(
+            adj.row_offsets, adj.col, adj.out_degree,
+            jnp.asarray(chunk.u), jnp.asarray(chunk.v), chunk.width,
+        )
+
+    def count_chunk(self, adj, chunk):
+        a, b, _, _ = self._gather(adj, chunk)
+        return self.intersect_count(a, b)
+
+    def per_node_chunk(self, adj, chunk, n_out):
+        a, b, _, _ = self._gather(adj, chunk)
+        count, arm = self.intersect_per_node(a, b)
+        return _panel_scatter_per_node(
+            jnp.asarray(chunk.u), jnp.asarray(chunk.v), a, count, arm, n_out=n_out
+        )
+
+    def support_chunk(self, adj, chunk, m_out):
+        a, b, _, _ = self._gather(adj, chunk)
+        count, arm, closure = self.intersect_support(a, b)
+        return _panel_scatter_support(
+            jnp.asarray(chunk.edge_idx), jnp.asarray(chunk.u), jnp.asarray(chunk.v),
+            adj.row_offsets, count, arm, closure, m_out=m_out,
+        )
+
+
+class PallasBackend(PanelBackend):
+    """The panel plan driving the Pallas kernel family.
+
+    Identical planning and scatters to :class:`PanelBackend`; the
+    equality-tile reductions run inside
+    :mod:`repro.kernels.triangle_count` (interpret mode off-TPU), with
+    tile shapes steered per pow2 bucket by the optional ``tuner``.
+    """
+
+    name = "pallas"
+
+    def _tiles(self, a, b):
+        if self.tuner is None:
+            return None
+        return self.tuner.tiles(a.shape[0], a.shape[1], b.shape[1])
+
+    def intersect_count(self, a, b):
+        from repro.kernels.triangle_count import ops as tc_ops
+
+        return tc_ops.intersect_count(a, b, tiles=self._tiles(a, b))
+
+    def intersect_per_node(self, a, b):
+        from repro.kernels.triangle_count import ops as tc_ops
+
+        return tc_ops.intersect_per_node(a, b, tiles=self._tiles(a, b))
+
+    def intersect_support(self, a, b):
+        from repro.kernels.triangle_count import ops as tc_ops
+
+        return tc_ops.intersect_support(a, b, tiles=self._tiles(a, b))
+
+
+class DistributedBackend(KernelBackend):
+    """The §III-E striped multi-device schedule — global counts only.
+
+    Counting executes whole-CSR, not chunk-wise: the engine routes it
+    through ``count_triangles_distributed_csr`` (which composes its own
+    striping with the wedge-buffer budget), so this backend declares the
+    ``count`` capability but deliberately does not implement the chunk
+    driver protocol — :func:`run_workload` cannot drive it.  Per-node
+    and support requests fall back to the wedge backend via
+    :func:`resolve_backend`, with the gap recorded in
+    ``EngineStats.fallback_reason``.
+    """
+
+    name = "distributed"
+    capabilities = frozenset({"count"})
+
+    def plan(self, work, budget, *, bucket_pow2: bool = False):
+        # run_workload always plans first, so this is the loud stop for
+        # any caller trying to drive the distributed schedule chunk-wise
+        raise NotImplementedError(
+            "the distributed schedule counts whole-CSR via "
+            "TriangleCounter(method='distributed', mesh=...).count() / "
+            "repro.core.distributed.count_triangles_distributed_csr — "
+            "it has no chunk plan for run_workload"
+        )
+
+
+_BACKEND_FACTORIES: dict[str, object] = {}
+
+
+def register_backend(name: str, factory) -> None:
+    """Register ``factory(widths=..., tuner=...) -> KernelBackend``."""
+    _BACKEND_FACTORIES[name] = factory
+
+
+register_backend("wedge_bsearch", lambda widths, tuner: WedgeBackend())
+register_backend("panel", lambda widths, tuner: PanelBackend(widths=widths))
+register_backend("pallas", lambda widths, tuner: PallasBackend(widths=widths, tuner=tuner))
+register_backend("distributed", lambda widths, tuner: DistributedBackend())
+
+
+def make_backend(name: str, *, widths=DEFAULT_WIDTHS, tuner=None) -> KernelBackend:
+    """Instantiate the backend registered under ``name``."""
+    try:
+        factory = _BACKEND_FACTORIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; registered: "
+            f"{sorted(_BACKEND_FACTORIES)}"
+        ) from None
+    return factory(widths, tuner)
+
+
+_warned_fallbacks: set = set()
+
+
+def resolve_backend(method: str, kind: str, *, widths=DEFAULT_WIDTHS, tuner=None):
+    """Pick the backend for (schedule, workload) by capability.
+
+    Returns ``(backend, executed_name, fallback_reason)``.  When the
+    requested backend lacks ``kind``, the wedge backend substitutes and
+    the reason is returned (plus a one-time ``RuntimeWarning`` per
+    (method, kind) pair per process) — capability gaps are loud.
+    """
+    if kind not in CAPABILITIES:
+        raise ValueError(f"unknown workload kind {kind!r}; expected one of {CAPABILITIES}")
+    backend = make_backend(method, widths=widths, tuner=tuner)
+    if kind in backend.capabilities:
+        return backend, method, None
+    reason = (
+        f"backend {method!r} has no {kind!r} kernel; fell back to 'wedge_bsearch'"
+    )
+    key = (method, kind)
+    if key not in _warned_fallbacks:
+        _warned_fallbacks.add(key)
+        warnings.warn(reason, RuntimeWarning, stacklevel=3)
+    return make_backend("wedge_bsearch", widths=widths, tuner=tuner), "wedge_bsearch", reason
+
+
+def run_workload(
+    backend: KernelBackend,
+    kind: str,
+    work: Workload,
+    *,
+    budget: int | None = None,
+    n_out: int | None = None,
+    bucket_pow2: bool = False,
+):
+    """Plan → launch → accumulate one workload through a backend.
+
+    The single driver every caller shares (engine methods, analytics
+    support, truss peel rounds, incremental probes).  Returns
+    ``(value, plan)`` where ``value`` is the host-accumulated result —
+    ``int`` for ``"count"``, int64 ``(n_out,)`` for ``"per_node"``,
+    int64 per-query-edge for ``"support"`` — and ``plan`` carries the
+    launch stats (``n_chunks``, ``peak_buffer``, ``total_wedges``).
+    """
+    plan = backend.plan(work, budget, bucket_pow2=bucket_pow2)
+    adj = _DeviceAdj(
+        jnp.asarray(work.row_offsets), jnp.asarray(work.col),
+        jnp.asarray(work.out_degree), work.n_steps,
+    )
+    if kind == "count":
+        # collect device partials first, accumulate once: launches stay
+        # async-dispatched instead of syncing host-side per chunk
+        partials = [backend.count_chunk(adj, chunk) for chunk in plan.chunks]
+        return accumulate_partials(partials), plan
+    if kind == "per_node":
+        if n_out is None:
+            n_out = adj.row_offsets.shape[0] - 1
+        out = np.zeros((n_out,), np.int64)
+        for chunk in plan.chunks:
+            out += np.asarray(backend.per_node_chunk(adj, chunk, n_out), dtype=np.int64)
+        return out, plan
+    if kind == "support":
+        m_out = int(work.src_host.shape[0])
+        out = np.zeros((m_out,), np.int64)
+        for chunk in plan.chunks:
+            out += np.asarray(backend.support_chunk(adj, chunk, m_out), dtype=np.int64)
+        return out, plan
+    raise ValueError(f"unknown workload kind {kind!r}")
+
+
 def iter_wedge_chunks(csr: OrientedCSR, max_wedge_chunk: int | None, *, bucket_pow2: bool = False):
     """Lazily yield −1-padded fixed-shape ``(src, dst, start)`` chunks.
 
-    ``start`` is each chunk's offset into the directed edge list — add it
-    to a kernel's local edge ids to recover global edge indices (the
-    per-edge support scatter needs this).  ``csr.src``/``csr.col`` may
-    carry a −1-padded tail (padded slots contribute no wedges), and
-    ``bucket_pow2`` rounds the chunk width and the peak buffer up to
-    powers of two — together these let shape-churning callers (the truss
-    peel's shrinking subgraphs) reuse O(log m) kernel compilations.
+    The historical edge-chunk iterator, now a thin view over
+    :meth:`WedgeBackend.plan`.  ``start`` is each chunk's offset into the
+    directed edge list — add it to a kernel's local edge ids to recover
+    global edge indices (the per-edge support scatter needs this).
+    ``csr.src``/``csr.col`` may carry a −1-padded tail (padded slots
+    contribute no wedges), and ``bucket_pow2`` rounds the chunk width and
+    the peak buffer up to powers of two — together these let
+    shape-churning callers (the truss peel's shrinking subgraphs) reuse
+    O(log m) kernel compilations.
 
     Returns ``(generator, n_chunks, peak, total_wedges)`` where ``peak``
     is the per-launch buffer: the largest chunk's wedge load (pow2-rounded
@@ -301,35 +854,11 @@ def iter_wedge_chunks(csr: OrientedCSR, max_wedge_chunk: int | None, *, bucket_p
     overhead stays O(chunk) in the larger-than-memory regime the budget
     targets.
     """
-    src = np.asarray(csr.src)
-    out_deg = np.asarray(csr.out_degree)
-    reps = np.where(src >= 0, out_deg[np.maximum(src, 0)], 0).astype(np.int64)
-    bounds, _ = plan_edge_chunks(reps, max_wedge_chunk)
-    cum = np.concatenate([[0], np.cumsum(reps)])
-    peak = max(int(cum[end] - cum[start]) for start, end in bounds)
-    peak = max(peak, 1)
-    edges_per_chunk = max(end - start for start, end in bounds)
-    if bucket_pow2:
-        peak = next_pow2(peak)
-        edges_per_chunk = next_pow2(edges_per_chunk)
-
-    def gen():
-        if len(bounds) == 1 and edges_per_chunk == src.shape[0]:
-            # single full chunk: feed the (possibly device-resident) CSR
-            # arrays directly — no host round-trip, no copies
-            yield csr.src, csr.col, 0
-            return
-        dst = np.asarray(csr.col)
-        for start, end in bounds:
-            pad = edges_per_chunk - (end - start)
-            s, d = src[start:end], dst[start:end]
-            if pad:
-                fill = np.full(pad, -1, np.int32)
-                s = np.concatenate([s, fill])
-                d = np.concatenate([d, fill])
-            yield s.astype(np.int32, copy=False), d.astype(np.int32, copy=False), start
-
-    return gen(), len(bounds), peak, int(reps.sum())
+    plan = WedgeBackend().plan(
+        workload_from_csr(csr), max_wedge_chunk, bucket_pow2=bucket_pow2
+    )
+    gen = ((c.src, c.dst, c.start) for c in plan.chunks)
+    return gen, plan.n_chunks, plan.peak_buffer, plan.total_wedges
 
 
 # ---------------------------------------------------------------------------
@@ -368,6 +897,18 @@ def choose_method(
     return "wedge_bsearch"
 
 
+def resolve_method(method: str, out_degree, *, mesh=None, widths=DEFAULT_WIDTHS) -> str:
+    """Resolve ``"auto"`` against an out-degree histogram (never "auto")."""
+    if method != "auto":
+        return method
+    out_deg = np.asarray(out_degree)
+    max_deg = int(out_deg.max()) if out_deg.size else 0
+    mean_deg = float(out_deg.mean()) if out_deg.size else 0.0
+    return choose_method(
+        max_out_degree=max_deg, mean_out_degree=mean_deg, mesh=mesh, widths=widths
+    )
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -392,9 +933,13 @@ class TriangleCounter:
     shorter_side:
         Distributed only — enumerate wedge candidates from the smaller
         endpoint list (§Perf "opt" variant in EXPERIMENTS.md).
+    tuner:
+        Optional :class:`repro.core.tuning.AutoTuner` steering the Pallas
+        kernels' tile shapes from its on-disk grid-search cache.
 
     After any call, :attr:`last_stats` holds an :class:`EngineStats`
-    describing what ran (resolved method, chunk count, peak buffer).
+    describing what ran (resolved method, executed method, chunk count,
+    peak buffer, and any capability-fallback reason).
     """
 
     def __init__(
@@ -404,6 +949,7 @@ class TriangleCounter:
         widths: tuple[int, ...] = DEFAULT_WIDTHS,
         mesh=None,
         shorter_side: bool = False,
+        tuner=None,
     ):
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
@@ -416,6 +962,7 @@ class TriangleCounter:
         self.widths = tuple(widths)
         self.mesh = mesh
         self.shorter_side = shorter_side
+        self.tuner = tuner
         self.last_stats: EngineStats | None = None
 
     # -- public API ---------------------------------------------------------
@@ -432,29 +979,43 @@ class TriangleCounter:
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             return 0
-        method = self._resolve(csr)
-        if method == "wedge_bsearch":
-            return self._count_wedge(csr)
-        if method in ("panel", "pallas"):
-            return self._count_panel(csr, pallas=(method == "pallas"))
-        if method == "distributed":
+        resolved = self._resolve(csr)
+        if resolved == "distributed":
             return self._count_distributed(csr)
-        raise AssertionError(method)
+        return self._run(csr, "count", resolved)
 
     def per_node(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Per-vertex triangle incidences, int64 host array.
 
-        Always runs the (chunked) wedge schedule — the panel and
-        distributed schedules produce global partials only; per-node
-        scatter is the wedge kernel's native output.  ``last_stats``
-        records this fallback honestly: ``resolved_method`` is what the
-        configuration/dispatch chose, ``method`` is ``"wedge_bsearch"``.
+        Runs whichever backend the configured/dispatched schedule
+        registers — the panel and Pallas backends scatter their arm
+        attributions natively, so ``method="pallas"`` genuinely executes
+        the Pallas kernels here.  Only the ``distributed`` schedule
+        lacks a per-node kernel; it falls back to the wedge backend with
+        an explicit ``fallback_reason`` + one-time warning.
         """
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
             return np.zeros((n,), np.int64)
-        return self._per_node_wedge(csr, resolved=self._resolve(csr))
+        return self._run(csr, "per_node", self._resolve(csr))
+
+    def edge_support(self, edges, n_nodes: int | None = None) -> np.ndarray:
+        """Per-directed-edge triangle support, int64 host array.
+
+        Aligned with the oriented CSR's ``(src, col)`` edge list; the sum
+        is exactly ``3 × count``.  The richer dataclass wrapper (top-k,
+        totals) lives in :func:`repro.analytics.support.edge_support`,
+        which routes through this method.
+        """
+        csr = self._prepare(edges, n_nodes)
+        if csr is None:
+            return np.zeros((0,), np.int64)
+        return self._run(csr, "support", self._resolve(csr))
+
+    def per_node_counts(self, edges, n_nodes: int | None = None) -> np.ndarray:
+        """Alias of :meth:`per_node` (clearer name for analytics callers)."""
+        return self.per_node(edges, n_nodes)
 
     @staticmethod
     def _degree_hist(edges, n_nodes: int | None):
@@ -498,30 +1059,16 @@ class TriangleCounter:
         return None
 
     def _resolve(self, csr: OrientedCSR) -> str:
-        if self.method != "auto":
-            return self.method
-        out_deg = np.asarray(csr.out_degree)
-        max_deg = int(out_deg.max()) if out_deg.size else 0
-        mean_deg = float(out_deg.mean()) if out_deg.size else 0.0
-        return choose_method(
-            max_out_degree=max_deg,
-            mean_out_degree=mean_deg,
-            mesh=self.mesh,
-            widths=self.widths,
+        return resolve_method(
+            self.method, csr.out_degree, mesh=self.mesh, widths=self.widths
         )
 
     @staticmethod
     def _search_steps(csr: OrientedCSR) -> int:
         return search_steps(csr)
 
-    def _wedge_chunks(self, csr: OrientedCSR):
-        """(src, dst) chunk stream under this counter's budget — the
-        engine-internal view of :func:`iter_wedge_chunks` (offsets
-        dropped; the global count/per-node scatters don't need them)."""
-        chunks, n_chunks, peak, total = iter_wedge_chunks(csr, self.max_wedge_chunk)
-        return ((s, d) for s, d, _ in chunks), n_chunks, peak, total
-
-    def _record(self, method, n_chunks, peak, total_wedges, m_dir, resolved=None):
+    def _record(self, method, n_chunks, peak, total_wedges, m_dir,
+                resolved=None, fallback_reason=None):
         self.last_stats = EngineStats(
             method=method,
             resolved_method=resolved or method,
@@ -530,71 +1077,25 @@ class TriangleCounter:
             wedge_budget=self.max_wedge_chunk,
             total_wedges=total_wedges,
             n_directed_edges=m_dir,
+            fallback_reason=fallback_reason,
         )
 
-    # -- wedge_bsearch schedule ---------------------------------------------
-
-    def _count_wedge(self, csr: OrientedCSR) -> int:
-        chunks, n_chunks, peak, total = self._wedge_chunks(csr)
-        steps = self._search_steps(csr)
-        running = np.uint64(0)
-        for s, d in chunks:
-            partial = chunk_count_kernel(
-                jnp.asarray(s), jnp.asarray(d),
-                csr.row_offsets, csr.col, csr.out_degree,
-                wedge_budget=peak, n_steps=steps,
-            )
-            running += np.uint64(accumulate_partials([partial]))
-        self._record("wedge_bsearch", n_chunks, peak, total, csr.n_directed_edges)
-        return int(running)
-
-    def _per_node_wedge(self, csr: OrientedCSR, resolved: str) -> np.ndarray:
-        chunks, n_chunks, peak, total = self._wedge_chunks(csr)
-        steps = self._search_steps(csr)
-        out = np.zeros((csr.n_nodes,), np.int64)
-        for s, d in chunks:
-            part = chunk_per_node_kernel(
-                jnp.asarray(s), jnp.asarray(d),
-                csr.row_offsets, csr.col, csr.out_degree,
-                wedge_budget=peak, n_steps=steps,
-            )
-            out += np.asarray(part, dtype=np.int64)
-        self._record("wedge_bsearch", n_chunks, peak, total,
-                     csr.n_directed_edges, resolved=resolved)
-        return out
-
-    # -- panel / pallas schedules -------------------------------------------
-
-    def _count_panel(self, csr: OrientedCSR, *, pallas: bool) -> int:
-        if pallas:
-            from repro.kernels.triangle_count import ops as tc_ops
-
-            intersect = lambda a, b: tc_ops.intersect_count(a, b)
-        else:
-            intersect = panel_intersect_count
-        budget = self.max_wedge_chunk
-        buckets = bucketize_edges(csr, self.widths)
-        partials = []
-        n_chunks = 0
-        peak = 0
-        for width, idx in buckets.items():
-            per = len(idx) if budget is None else max(1, int(budget) // width)
-            n_slices = -(-len(idx) // per)
-            for s in range(0, len(idx), per):
-                sl = idx[s : s + per]
-                pad = per - len(sl) if n_slices > 1 else 0
-                padded = np.concatenate([sl, np.full(pad, -1, np.int32)]) if pad else sl
-                a, b, _, _ = gather_panels(
-                    csr, jnp.asarray(padded.astype(np.int32)), width
-                )
-                partials.append(intersect(a, b))
-                n_chunks += 1
-                peak = max(peak, a.shape[0] * width)
-        out_deg = np.asarray(csr.out_degree)
-        total = int(out_deg[np.asarray(csr.src)].astype(np.int64).sum())
-        self._record("pallas" if pallas else "panel", n_chunks, peak, total,
-                     csr.n_directed_edges)
-        return accumulate_partials(partials)
+    def _run(self, csr: OrientedCSR, kind: str, resolved: str):
+        """Dispatch one workload through the capability-resolved backend."""
+        backend, executed, reason = resolve_backend(
+            resolved, kind, widths=self.widths, tuner=self.tuner
+        )
+        work = workload_from_csr(csr)
+        value, plan = run_workload(
+            backend, kind, work,
+            budget=self.max_wedge_chunk,
+            n_out=csr.n_nodes if kind == "per_node" else None,
+        )
+        self._record(
+            executed, plan.n_chunks, plan.peak_buffer, plan.total_wedges,
+            csr.n_directed_edges, resolved=resolved, fallback_reason=reason,
+        )
+        return value
 
     # -- distributed schedule -----------------------------------------------
 

@@ -65,13 +65,22 @@ import numpy as np
 
 from .engine import (
     TriangleCounter,
-    chunk_per_node_kernel,
+    WedgeChunk,
+    make_backend,
+    make_workload,
     next_pow2 as _next_pow2,
     plan_edge_chunks,
+    run_workload,
+    _DeviceAdj,
 )
 from repro.graphs.formats import validate_node_ids
 
 __all__ = ["IncrementalTriangleCounter", "UpdateStats"]
+
+# schedules the probe passes can execute; anything else ("auto",
+# "distributed") keeps the wedge chunk kernels, whose shape-stability
+# properties are the serving default
+_PROBE_METHODS = ("wedge_bsearch", "panel", "pallas")
 
 _MASK32 = np.int64(0xFFFFFFFF)
 _COL_PAD = np.int32(2**31 - 1)  # sorted-tail sentinel; never inside a row
@@ -92,6 +101,7 @@ class UpdateStats:
     peak_wedge_buffer: int   # largest wedge buffer materialized per launch
     wedge_budget: int | None  # the configured max_wedge_chunk
     delta: int               # signed change in the global triangle count
+    probe_method: str = "wedge_bsearch"  # kernel backend the probes ran
 
 
 class IncrementalTriangleCounter:
@@ -111,9 +121,14 @@ class IncrementalTriangleCounter:
         Per-launch wedge-buffer budget (slots) applied to the bootstrap
         *and* to every update batch's probe workload.
     method:
-        Engine schedule for the bootstrap count only (updates always run
-        the wedge chunk kernels, whose per-node scatter is the native
-        output the maintained state needs).
+        Engine schedule for the bootstrap count and — when it names one
+        of the probe-capable backends (``"wedge_bsearch"``, ``"panel"``,
+        ``"pallas"``) — for the three probe passes of every update
+        batch as well.  ``"auto"`` keeps the probes on the wedge chunk
+        kernels (the serving default: their buffer shapes are the most
+        compile-stable under a fixed budget); the panel/Pallas backends
+        pow2-pad their bucket slices so steady-state serving still
+        reuses a bounded set of compiled kernels.
 
     After any update, :attr:`last_update_stats` describes what ran.
 
@@ -132,6 +147,8 @@ class IncrementalTriangleCounter:
         if max_wedge_chunk is not None and max_wedge_chunk < 1:
             raise ValueError("max_wedge_chunk must be positive")
         self.max_wedge_chunk = max_wedge_chunk
+        self.probe_method = method if method in _PROBE_METHODS else "wedge_bsearch"
+        self._backend = make_backend(self.probe_method)
         self._n = int(n_nodes) if n_nodes else 0
         self._adj = np.empty(0, np.int64)  # sorted directed keys, both dirs
         self._count = 0
@@ -267,7 +284,7 @@ class IncrementalTriangleCounter:
         self.last_update_stats = UpdateStats(
             op=op, n_batch_edges=n_batch, n_probe_launches=launches,
             peak_wedge_buffer=peak, wedge_budget=self.max_wedge_chunk,
-            delta=delta,
+            delta=delta, probe_method=self.probe_method,
         )
 
     def _grow(self, n: int) -> None:
@@ -320,7 +337,7 @@ class IncrementalTriangleCounter:
 
         ``adj`` is a sorted directed-key array (the adjacency to close
         wedges against).  Enumerates candidates from the shorter endpoint
-        list and closes with the engine's chunk kernels under the
+        list and closes with the configured kernel backend under the
         ``max_wedge_chunk`` budget.  Returns
         ``(hits, per_node, n_launches, peak_buffer)``.
         """
@@ -341,6 +358,22 @@ class IncrementalTriangleCounter:
         swap = deg[pv] < deg[pu]
         eu = np.where(swap, pv, pu).astype(np.int32)
         ev = np.where(swap, pu, pv).astype(np.int32)
+        m_valid = col.shape[0]
+        col_pad = _next_pow2(m_valid)
+        if col_pad > m_valid:
+            col = np.concatenate([col, np.full(col_pad - m_valid, _COL_PAD)])
+        if self.probe_method != "wedge_bsearch":
+            # panel/pallas probe: the backend buckets the probe pairs by
+            # neighbor-panel width and pow2-pads each slice — its own
+            # compile-stability discipline
+            work = make_workload(row, col, deg, eu, ev)
+            per_node, plan = run_workload(
+                self._backend, "per_node", work,
+                budget=self.max_wedge_chunk, n_out=n_pad, bucket_pow2=True,
+            )
+            total = int(per_node.sum())
+            assert total % 3 == 0, total
+            return total // 3, per_node[:n], plan.n_chunks, plan.peak_buffer
         reps = deg[eu].astype(np.int64)
         bounds, eff = plan_edge_chunks(reps, self.max_wedge_chunk)
         if self.max_wedge_chunk is None:
@@ -351,16 +384,12 @@ class IncrementalTriangleCounter:
             # same stability trick, capped so the budget stays honored
             eff = min(self.max_wedge_chunk, _next_pow2(eff))
         edges_per_chunk = _next_pow2(max(end - start for start, end in bounds))
-        m_valid = col.shape[0]
-        col_pad = _next_pow2(m_valid)
-        if col_pad > m_valid:
-            col = np.concatenate([col, np.full(col_pad - m_valid, _COL_PAD)])
         # padded length bounds every row, so the step count is stable per
         # col bucket; overshooting the true ⌈log₂ deg_max⌉ is harmless
         n_steps = max(1, int(np.ceil(np.log2(col_pad + 1))))
-        row_j = jnp.asarray(row)
-        col_j = jnp.asarray(col)
-        deg_j = jnp.asarray(deg)
+        dev_adj = _DeviceAdj(
+            jnp.asarray(row), jnp.asarray(col), jnp.asarray(deg), n_steps
+        )
         per_node = np.zeros(n_pad, np.int64)
         for start, end in bounds:
             pad = edges_per_chunk - (end - start)
@@ -369,9 +398,8 @@ class IncrementalTriangleCounter:
                 fill = np.full(pad, -1, np.int32)
                 s = np.concatenate([s, fill])
                 d = np.concatenate([d, fill])
-            pn = chunk_per_node_kernel(
-                jnp.asarray(s), jnp.asarray(d), row_j, col_j, deg_j,
-                wedge_budget=eff, n_steps=n_steps,
+            pn = self._backend.per_node_chunk(
+                dev_adj, WedgeChunk(s, d, start, eff), n_pad
             )
             per_node += np.asarray(pn, dtype=np.int64)
         # every hit scatters +1 to exactly u, v and w, so the per-node

@@ -1,5 +1,15 @@
-"""Pallas TPU kernel for the triangle-counting intersection hot spot."""
+"""Pallas TPU kernel family for the triangle-counting intersection hot spot."""
 from . import ops, ref
-from .triangle_count import intersect_count_pallas
+from .triangle_count import (
+    intersect_count_pallas,
+    intersect_per_node_pallas,
+    intersect_support_pallas,
+)
 
-__all__ = ["ops", "ref", "intersect_count_pallas"]
+__all__ = [
+    "ops",
+    "ref",
+    "intersect_count_pallas",
+    "intersect_per_node_pallas",
+    "intersect_support_pallas",
+]

@@ -1,20 +1,41 @@
-"""Jit'd public wrapper for the triangle-intersection kernel.
+"""Jit'd public wrappers for the triangle-intersection kernel family.
 
-Dispatches to the Pallas kernel (native on TPU, ``interpret=True`` on CPU)
-with the signature expected by ``repro.core.count._count_panel``.
+Dispatches to the Pallas kernels (native on TPU, ``interpret=True`` on
+CPU) with the signatures the engine's panel/pallas backend expects
+(:mod:`repro.core.engine`).  ``tiles=(block_edges, tlv)`` overrides the
+static tile heuristic — the hook the :mod:`repro.core.tuning` autotuner
+plugs its per-shape grid-search picks into.
 """
 from __future__ import annotations
 
 import jax
 
-from .triangle_count import intersect_count_pallas
+from .triangle_count import (
+    intersect_count_pallas,
+    intersect_per_node_pallas,
+    intersect_support_pallas,
+)
 
-__all__ = ["intersect_count"]
+__all__ = ["intersect_count", "intersect_per_node", "intersect_support"]
 
 
 def intersect_count(
-    a: jax.Array, b: jax.Array, a_len: jax.Array | None = None, b_len: jax.Array | None = None
+    a: jax.Array,
+    b: jax.Array,
+    a_len: jax.Array | None = None,
+    b_len: jax.Array | None = None,
+    tiles=None,
 ) -> jax.Array:
     """Per-row sorted-intersection sizes; lengths are implied by −1 padding."""
     del a_len, b_len  # panels are −1 padded; masks are implicit
-    return intersect_count_pallas(a, b)
+    return intersect_count_pallas(a, b, tiles=tiles)
+
+
+def intersect_per_node(a: jax.Array, b: jax.Array, tiles=None):
+    """(count, arm) per-row intersection with u-side match attribution."""
+    return intersect_per_node_pallas(a, b, tiles=tiles)
+
+
+def intersect_support(a: jax.Array, b: jax.Array, tiles=None):
+    """(count, arm, closure) — the full per-edge support attribution."""
+    return intersect_support_pallas(a, b, tiles=tiles)

@@ -1,10 +1,17 @@
-"""Pure-jnp oracle for the panel intersection kernel."""
+"""Pure-jnp oracles for the panel intersection kernel family."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["intersect_count_ref"]
+__all__ = ["intersect_count_ref", "intersect_per_node_ref", "intersect_support_ref"]
+
+
+def _eq(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(B, Lu, Lv) masked equality cube; padding (−1) never matches."""
+    eq = a[:, :, None] == b[:, None, :]
+    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    return eq & valid
 
 
 def intersect_count_ref(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -14,6 +21,19 @@ def intersect_count_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     dtype.  Returns (B,) int32.  Padding slots are −1 and never match
     because valid vertex ids are ≥ 0.
     """
-    eq = a[:, :, None] == b[:, None, :]
-    valid = (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
-    return jnp.sum(eq & valid, axis=(1, 2), dtype=jnp.int32)
+    return jnp.sum(_eq(a, b), axis=(1, 2), dtype=jnp.int32)
+
+
+def intersect_per_node_ref(a: jax.Array, b: jax.Array):
+    """(count (B,), arm (B, Lu)) — the per-node kernel's axis reductions."""
+    eq = _eq(a, b)
+    arm = jnp.sum(eq, axis=2, dtype=jnp.int32)
+    return jnp.sum(arm, axis=1, dtype=jnp.int32), arm
+
+
+def intersect_support_ref(a: jax.Array, b: jax.Array):
+    """(count (B,), arm (B, Lu), closure (B, Lv)) — the support reductions."""
+    eq = _eq(a, b)
+    arm = jnp.sum(eq, axis=2, dtype=jnp.int32)
+    closure = jnp.sum(eq, axis=1, dtype=jnp.int32)
+    return jnp.sum(arm, axis=1, dtype=jnp.int32), arm, closure

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: bucketed sorted-set intersection counting.
+"""Pallas TPU kernel family: bucketed sorted-set intersection.
 
 This is the TPU re-blocking of the paper's ``CountTriangles`` CUDA kernel
 (§III-C).  The CUDA version runs one serial two-pointer merge per thread;
@@ -12,6 +12,23 @@ and counts equal pairs with a broadcast equality reduction — every lane
 does useful work every cycle, and the intersection of a block of edges
 completes in ``Lu·Lv / (8·128)`` VPU ops instead of a data-dependent loop.
 
+The family shares that one equality tile and differs only in which axis
+reductions leave the kernel — no extra memory traffic is read to produce
+the richer outputs:
+
+``intersect_count_pallas``
+    ``Σ_{j,k} eq`` per edge — the scalar per-edge match count.
+``intersect_per_node_pallas``
+    adds the *arm* attribution ``Σ_k eq`` (one slot per u-neighbor):
+    how many triangles each wedge arm ``(u, w)`` closes.  Scattering the
+    per-edge count to ``u``/``v`` and the arm counts to the ``w`` values
+    yields exact per-node triangle incidences.
+``intersect_support_pallas``
+    adds the *closure* attribution ``Σ_j eq`` (one slot per v-neighbor)
+    on top, so every hit can be billed to all three directed edges of
+    its triangle — base ``(u, v)``, arm ``(u, w)``, closure ``(v, w)`` —
+    which is exactly the per-edge support scatter k-truss peels on.
+
 Design choices mirroring the paper's optimizations:
 
 * the paper's *unzipping* (SoA layout, §III-D1) → panels are gathered from
@@ -19,8 +36,10 @@ Design choices mirroring the paper's optimizations:
 * the paper's texture-cache reliance (§III-D4) → explicit VMEM staging via
   ``BlockSpec`` (HBM→VMEM copies are software-managed, so "cache hit rate"
   becomes a compile-time property);
-* the paper's warp sizing (§III-D5) → the ``block_edges`` (TB) tile height;
-  swept in EXPERIMENTS.md §Perf exactly like the paper's grid search;
+* the paper's warp sizing (§III-D5) → the ``block_edges`` (TB) tile height
+  and the v-tile width (TLv); the static heuristic lives in
+  :func:`_pick_tiles` and the measured per-shape grid search in
+  :mod:`repro.core.tuning` (pass ``tiles=(TB, TLv)`` to override);
 * degree skew (the reason the paper picked *forward*) → callers bucket
   edges by panel width (`repro.core.count.bucketize_edges`), so padding
   waste is bounded and each bucket compiles a tight fixed-shape kernel;
@@ -30,9 +49,12 @@ Design choices mirroring the paper's optimizations:
   every slice to one static shape so chunk count never drives compiles.
 
 The v-side is tiled (``TLv``) and accumulated across the innermost grid
-dimension so wide buckets never exceed the VMEM budget; the output block
-index map is independent of that dimension, making the partial-sum
-accumulation a standard revisited-block reduction.
+dimension so wide buckets never exceed the VMEM budget; the count/arm
+output block index maps are independent of that dimension, making their
+partial-sum accumulation a standard revisited-block reduction, while the
+closure output block *is* indexed by it and is written exactly once.
+Every kernel runs ``interpret=True`` off-TPU, so the CPU CI exercises the
+identical code path the TPU compiles.
 """
 from __future__ import annotations
 
@@ -42,27 +64,67 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["intersect_count_pallas"]
+__all__ = [
+    "intersect_count_pallas",
+    "intersect_per_node_pallas",
+    "intersect_support_pallas",
+]
 
 
-def _kernel(a_ref, b_ref, o_ref):
+def _eq_tile(a, b):
+    """The shared broadcast-equality cube: (TB, Lu, TLv) boolean."""
+    return (a[:, :, None] == b[:, None, :]) & (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+
+
+def _kernel_count(a_ref, b_ref, o_ref):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...]  # (TB, Lu)
-    b = b_ref[...]  # (TB, TLv)
-    eq = (a[:, :, None] == b[:, None, :]) & (a[:, :, None] >= 0) & (b[:, None, :] >= 0)
+    eq = _eq_tile(a_ref[...], b_ref[...])
     o_ref[...] += jnp.sum(eq, axis=(1, 2), dtype=jnp.int32)
+
+
+def _kernel_per_node(a_ref, b_ref, cnt_ref, arm_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        arm_ref[...] = jnp.zeros_like(arm_ref)
+
+    eq = _eq_tile(a_ref[...], b_ref[...])
+    arm = jnp.sum(eq, axis=2, dtype=jnp.int32)   # (TB, Lu)
+    arm_ref[...] += arm
+    cnt_ref[...] += jnp.sum(arm, axis=1, dtype=jnp.int32)
+
+
+def _kernel_support(a_ref, b_ref, cnt_ref, arm_ref, clo_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        arm_ref[...] = jnp.zeros_like(arm_ref)
+
+    eq = _eq_tile(a_ref[...], b_ref[...])
+    arm = jnp.sum(eq, axis=2, dtype=jnp.int32)   # (TB, Lu) — accumulated over j
+    arm_ref[...] += arm
+    cnt_ref[...] += jnp.sum(arm, axis=1, dtype=jnp.int32)
+    # the closure block is indexed by j: each (i, j) tile is visited once,
+    # so it is written (not accumulated) — no init needed
+    clo_ref[...] = jnp.sum(eq, axis=1, dtype=jnp.int32)  # (TB, TLv)
 
 
 def _pick_tiles(n_edges: int, lu: int, lv: int) -> tuple[int, int]:
     """Choose (TB, TLv) so the equality cube stays inside the VMEM budget.
 
     Budget: TB·Lu·TLv ≤ 2²¹ elements (≈8 MiB of int32 compares), TLv a
-    multiple of 128 where possible (VPU lane width).
+    multiple of 128 where possible (VPU lane width).  This is the static
+    heuristic; :mod:`repro.core.tuning` grid-searches the same space per
+    pow2 bucket shape and its picks are passed back in via ``tiles=``.
     """
     budget = 1 << 21
     tlv = min(lv, 512)
@@ -74,27 +136,120 @@ def _pick_tiles(n_edges: int, lu: int, lv: int) -> tuple[int, int]:
     return tb, tlv
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _run(a, b, *, interpret: bool):
+def _clamp_tiles(tiles, n, lv):
+    """Clamp an explicit (TB, TLv) override to the panel's real extents."""
+    tb, tlv = tiles
+    return max(1, min(int(tb), n)), max(1, min(int(tlv), lv))
+
+
+def _specs(tb: int, lu: int, tlv: int):
+    """Input BlockSpecs shared by every kernel in the family."""
+    return [
+        pl.BlockSpec((tb, lu), lambda i, j: (i, 0)),
+        pl.BlockSpec((tb, tlv), lambda i, j: (i, j)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tiles"))
+def _run_count(a, b, *, interpret: bool, tiles=None):
     n, lu = a.shape
     _, lv = b.shape
-    tb, tlv = _pick_tiles(n, lu, lv)
+    tb, tlv = _clamp_tiles(tiles, n, lv) if tiles else _pick_tiles(n, lu, lv)
     grid = (pl.cdiv(n, tb), pl.cdiv(lv, tlv))
     return pl.pallas_call(
-        _kernel,
+        _kernel_count,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tb, lu), lambda i, j: (i, 0)),
-            pl.BlockSpec((tb, tlv), lambda i, j: (i, j)),
-        ],
+        in_specs=_specs(tb, lu, tlv),
         out_specs=pl.BlockSpec((tb,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(a, b)
 
 
-def intersect_count_pallas(a: jax.Array, b: jax.Array, interpret: bool | None = None):
-    """Count matches between −1-padded sorted rows. a:(B,Lu) b:(B,Lv)→(B,)int32."""
+@functools.partial(jax.jit, static_argnames=("interpret", "tiles"))
+def _run_per_node(a, b, *, interpret: bool, tiles=None):
+    n, lu = a.shape
+    _, lv = b.shape
+    tb, tlv = _clamp_tiles(tiles, n, lv) if tiles else _pick_tiles(n, lu, lv)
+    grid = (pl.cdiv(n, tb), pl.cdiv(lv, tlv))
+    return pl.pallas_call(
+        _kernel_per_node,
+        grid=grid,
+        in_specs=_specs(tb, lu, tlv),
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+            pl.BlockSpec((tb, lu), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, lu), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tiles"))
+def _run_support(a, b, *, interpret: bool, tiles=None):
+    n, lu = a.shape
+    _, lv = b.shape
+    tb, tlv = _clamp_tiles(tiles, n, lv) if tiles else _pick_tiles(n, lu, lv)
+    grid = (pl.cdiv(n, tb), pl.cdiv(lv, tlv))
+    return pl.pallas_call(
+        _kernel_support,
+        grid=grid,
+        in_specs=_specs(tb, lu, tlv),
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+            pl.BlockSpec((tb, lu), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, tlv), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n, lu), jnp.int32),
+            jax.ShapeDtypeStruct((n, lv), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
+def _norm(interpret, tiles):
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    return _run(a, b, interpret=interpret)
+    if tiles is not None:
+        tiles = (int(tiles[0]), int(tiles[1]))
+    return interpret, tiles
+
+
+def intersect_count_pallas(
+    a: jax.Array, b: jax.Array, interpret: bool | None = None, tiles=None
+):
+    """Count matches between −1-padded sorted rows. a:(B,Lu) b:(B,Lv)→(B,)int32."""
+    interpret, tiles = _norm(interpret, tiles)
+    return _run_count(a, b, interpret=interpret, tiles=tiles)
+
+
+def intersect_per_node_pallas(
+    a: jax.Array, b: jax.Array, interpret: bool | None = None, tiles=None
+):
+    """Per-edge counts + arm attribution.
+
+    Returns ``(count, arm)`` with ``count: (B,) int32`` the per-row match
+    total and ``arm: (B, Lu) int32`` the per-u-neighbor match count
+    (``count == arm.sum(axis=1)``; padding slots are always 0).
+    """
+    interpret, tiles = _norm(interpret, tiles)
+    return _run_per_node(a, b, interpret=interpret, tiles=tiles)
+
+
+def intersect_support_pallas(
+    a: jax.Array, b: jax.Array, interpret: bool | None = None, tiles=None
+):
+    """Per-edge counts + arm + closure attributions.
+
+    Returns ``(count, arm, closure)`` where ``closure: (B, Lv) int32``
+    counts matches per v-neighbor slot (``count == closure.sum(axis=1)``).
+    Together the three outputs bill every triangle to its three directed
+    edges — the per-edge support primitive.
+    """
+    interpret, tiles = _norm(interpret, tiles)
+    return _run_support(a, b, interpret=interpret, tiles=tiles)

@@ -37,7 +37,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     add_source_arguments(ap)
     ap.add_argument("--method", default="auto", choices=list(METHODS[:4]),
-                    help="counting schedule for the metrics passes "
+                    help="kernel backend for EVERY stage — count, clustering, "
+                         "per-edge support, k-truss peel "
                          "(default: auto dispatch)")
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
                     help="wedge-buffer budget per launch (slots); bounds "
@@ -84,6 +85,8 @@ def main() -> None:
     log(f"triangles[{es['method']}] = {report['triangles']}  "
         f"({report['timings_s']['count']*1e3:.1f} ms; {es['n_chunks']} chunk(s), "
         f"peak wedge buffer {es['peak_wedge_buffer']})")
+    if es.get("fallback_reason"):
+        log(f"note: {es['fallback_reason']}")
     log(f"transitivity = {report['transitivity']:.4f}   "
         f"avg clustering = {report['clustering']['average']:.4f}")
     if report["clustering"]["top_nodes"]:
@@ -91,13 +94,15 @@ def main() -> None:
                          for d in report["clustering"]["top_nodes"])
         log(f"top triangle nodes (node:T) = {tops}")
     sup = report["support"]
-    log(f"edge support: sum = {sup['sum']} (= 3·T), max = {sup['max']}  "
+    log(f"edge support[{sup['method']}]: sum = {sup['sum']} (= 3·T), "
+        f"max = {sup['max']}  "
         f"({report['timings_s']['support']*1e3:.1f} ms)")
     if "truss" in report:
         tr = report["truss"]
         spectrum = ", ".join(f"k={k}:{c}" for k, c in sorted(
             tr["spectrum"].items(), key=lambda kv: int(kv[0])))
-        log(f"k-truss: max_k = {tr['max_k']} in {tr['rounds']} peel round(s); "
+        log(f"k-truss[{tr['method']}]: max_k = {tr['max_k']} in "
+            f"{tr['rounds']} peel round(s); "
             f"trussness spectrum {{{spectrum}}} "
             f"({report['timings_s']['truss']*1e3:.1f} ms)")
 

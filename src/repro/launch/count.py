@@ -154,6 +154,13 @@ def main() -> None:
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
                     help="wedge-buffer budget per launch (slots); enables "
                          "memory-bounded edge partitioning")
+    ap.add_argument("--tile-cache", default=None, metavar="FILE",
+                    help="versioned tile-autotune cache (JSON) steering the "
+                         "pallas kernels' (block_edges, TLv) tiles")
+    ap.add_argument("--autotune", action="store_true",
+                    help="grid-search tiles for shapes missing from "
+                         "--tile-cache (paper §III-D5 sweep) and persist "
+                         "the winners")
     ap.add_argument("--baseline", action="store_true", help="also run NumPy CPU baseline")
     ap.add_argument("--distributed", action="store_true", help="shard over local devices")
     ap.add_argument("--clustering", action="store_true",
@@ -191,8 +198,13 @@ def main() -> None:
         from repro.launch.mesh import make_local_mesh
 
         mesh = make_local_mesh()
+    tuner = None
+    if args.tile_cache is not None or args.autotune:
+        from repro.core.tuning import AutoTuner
+
+        tuner = AutoTuner(args.tile_cache, tune_on_miss=args.autotune)
     tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk,
-                         mesh=mesh)
+                         mesh=mesh, tuner=tuner)
     count_input = graph
     if args.clustering_summary:
         # normalize to an OrientedCSR once up front so the count and the
@@ -210,6 +222,10 @@ def main() -> None:
     es = tc.last_stats
     log(f"triangles[{es.method}] = {t}  ({dt*1e3:.1f} ms; "
         f"{es.n_chunks} chunk(s), peak wedge buffer {es.peak_wedge_buffer})")
+    if es.fallback_reason:
+        log(f"note: {es.fallback_reason}")
+    if tuner is not None:
+        log(f"tile cache: {tuner.n_hits} hit(s), {tuner.n_tuned} shape(s) tuned")
 
     expected = info.get("expected_triangles")
     if expected is not None and t != expected:
@@ -266,6 +282,7 @@ def main() -> None:
                 wedge_budget=es.wedge_budget,
                 total_wedges=es.total_wedges,
                 n_directed_edges=es.n_directed_edges,
+                fallback_reason=es.fallback_reason,
             ),
             graph=info.get("graph"),
             source={k: v for k, v in info.items() if k != "graph"},

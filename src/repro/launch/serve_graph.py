@@ -9,6 +9,7 @@ latency for both traffic classes::
     python -m repro.launch.serve_graph --scale 10 --stream sliding_window \\
         --window 20000 --batch-size 512 --queries-per-batch 8
     python -m repro.launch.serve_graph --scale 12 --max-wedge-chunk 1048576
+    python -m repro.launch.serve_graph --scale 10 --method pallas   # Pallas probes
     python -m repro.launch.serve_graph --dataset karate --batch-size 16
     python -m repro.launch.serve_graph --input graph.txt.gz --cache-dir ~/.cache/tricsr
 
@@ -47,10 +48,11 @@ def run_service(
     max_batches: int | None = None,
     queries_per_batch: int = 4,
     max_wedge_chunk: int | None = None,
+    method: str = "auto",
 ):
     """Apply ``stream`` batches interleaved with queries; return a report."""
     counter = IncrementalTriangleCounter(
-        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk
+        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk, method=method
     )
     update_lat, query_lat = [], []
     n_batches = n_inserted = n_deleted = 0
@@ -105,6 +107,12 @@ def main() -> None:
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
                     help="wedge-buffer budget per launch, applied to every "
                          "update batch's probe workload")
+    ap.add_argument("--method", default="auto",
+                    choices=["auto", "wedge_bsearch", "panel", "pallas"],
+                    help="kernel backend for the bootstrap count and the "
+                         "update probes (auto keeps probes on the wedge "
+                         "schedule; panel/pallas route them through the "
+                         "panel/Pallas backend)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the final from-scratch oracle recount")
     args = ap.parse_args()
@@ -138,7 +146,10 @@ def main() -> None:
         max_batches=args.max_batches,
         queries_per_batch=args.queries_per_batch,
         max_wedge_chunk=args.max_wedge_chunk,
+        method=args.method,
     )
+    if counter.last_update_stats is not None:
+        print(f"probe backend: {counter.last_update_stats.probe_method}")
     print(f"served {rep['n_batches']} update batches "
           f"(+{rep['n_inserted']}/-{rep['n_deleted']} edges, "
           f"{rep['updates_per_s']:.0f} edge-updates/s) "
@@ -150,7 +161,7 @@ def main() -> None:
     print(f"live graph: {counter.n_edges} edges, T = {counter.count}")
 
     if not args.no_verify:
-        tc = TriangleCounter(method="auto", max_wedge_chunk=args.max_wedge_chunk)
+        tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk)
         expect = tc.count(counter.current_edges(), n_nodes=counter.n_nodes)
         if counter.count != expect:
             raise SystemExit(

@@ -143,17 +143,62 @@ def test_support_sum_is_three_times_count_at_two_budgets():
     np.testing.assert_array_equal(chunked.support, unchunked.support)
 
 
-def test_support_acceptance_identity_kron13():
+def test_support_acceptance_identity_kron13_every_backend():
     """The PR acceptance criterion, verbatim: on Kronecker-13 the support
-    sum equals 3× the engine count bit-exactly at two different budgets."""
+    sum equals 3× the engine count bit-exactly at two different budgets —
+    for every kernel backend, with the stats proving which one ran."""
     e = kronecker_rmat(13, seed=0)
+    csr = prepare_oriented(e)
     tc = TriangleCounter()
-    expect = tc.count(e)
+    expect = tc.count(csr)
     total = tc.last_stats.total_wedges
-    for budget in (max(total // 4, 1), max(total // 16, 1)):
-        sup = edge_support(e, max_wedge_chunk=budget)
-        assert int(sup.support.sum()) == 3 * expect, budget
-        assert sup.n_chunks > 1
+    for method in ("wedge_bsearch", "panel", "pallas"):
+        for budget in (max(total // 4, 1), max(total // 16, 1)):
+            sup = edge_support(csr, max_wedge_chunk=budget, method=method)
+            assert int(sup.support.sum()) == 3 * expect, (method, budget)
+            assert sup.n_chunks > 1
+            assert sup.method == method
+            assert sup.fallback_reason is None
+
+
+def test_support_bit_identical_across_backends(small_graphs):
+    """Per-edge support arrays (not just their sums) agree bit-exactly
+    across wedge/panel/pallas at two budgets."""
+    for name, e in small_graphs.items():
+        base = edge_support(e, method="wedge_bsearch")
+        for method in ("panel", "pallas"):
+            for budget in (None, 48):
+                sup = edge_support(e, max_wedge_chunk=budget, method=method)
+                np.testing.assert_array_equal(
+                    sup.support, base.support
+                ), (name, method, budget)
+                assert sup.method == method
+
+
+def test_truss_bit_identical_across_backends(karate, small_graphs):
+    """The k-truss spectrum — the heaviest repeated-support workload —
+    is backend-independent bit-exactly."""
+    for e in [karate, small_graphs["kron"]]:
+        base = k_truss_decomposition(e, method="wedge_bsearch")
+        for method in ("panel", "pallas"):
+            for budget in (None, 101):
+                dec = k_truss_decomposition(
+                    e, max_wedge_chunk=budget, method=method
+                )
+                np.testing.assert_array_equal(dec.trussness, base.trussness)
+                assert dec.method == method
+                assert dec.spectrum() == base.spectrum()
+
+
+def test_graph_report_method_axis(karate):
+    """graph_report(method=...) drives every stage through that backend."""
+    rep = graph_report(karate, method="pallas", top_k=2)
+    assert rep["engine"]["method"] == "pallas"
+    assert rep["support"]["method"] == "pallas"
+    assert rep["truss"]["method"] == "pallas"
+    assert rep["triangles"] == 45
+    assert rep["support"]["sum"] == 135
+    assert rep["truss"]["max_k"] == 5
 
 
 def test_support_karate_fixture(karate):

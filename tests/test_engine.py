@@ -225,15 +225,16 @@ def test_auto_dispatch_stats():
     )
 
 
-def test_per_node_records_resolved_vs_executed(family_graphs):
-    """per_node always executes the wedge schedule; the stats must say so
-    honestly instead of hiding a silent fallback."""
+def test_per_node_executes_configured_backend(family_graphs):
+    """per_node now runs the configured backend natively — the stats must
+    prove the non-wedge backend actually executed (no silent fallback)."""
     e = family_graphs["kron10"]
     for configured in ["panel", "pallas"]:
         tc = TriangleCounter(method=configured)
         tc.per_node(e)
-        assert tc.last_stats.method == "wedge_bsearch", configured
+        assert tc.last_stats.method == configured
         assert tc.last_stats.resolved_method == configured
+        assert tc.last_stats.fallback_reason is None
     # auto dispatch: resolved is whatever choose_method picked, never "auto"
     tc = TriangleCounter(method="auto")
     tc.per_node(e)
@@ -242,6 +243,92 @@ def test_per_node_records_resolved_vs_executed(family_graphs):
     tc2 = TriangleCounter(method="panel")
     tc2.count(e)
     assert tc2.last_stats.method == tc2.last_stats.resolved_method == "panel"
+
+
+def test_per_node_and_support_bit_identical_across_backends(family_graphs):
+    """The acceptance criterion: per-node and per-edge-support outputs are
+    bit-identical across wedge/panel/pallas at ≥2 budgets, with
+    EngineStats.method proving the non-wedge backend executed."""
+    e = family_graphs["kron10"]
+    base = TriangleCounter(method="wedge_bsearch")
+    pn0 = base.per_node(e)
+    sup0 = base.edge_support(e)
+    assert int(sup0.sum()) == 3 * base.count(e)
+    total = base.last_stats.total_wedges
+    for method in ["panel", "pallas"]:
+        for budget in [max(total // 4, 1), max(total // 16, 1)]:
+            tc = TriangleCounter(method=method, max_wedge_chunk=budget)
+            np.testing.assert_array_equal(tc.per_node(e), pn0)
+            assert tc.last_stats.method == method
+            assert tc.last_stats.n_chunks > 1
+            np.testing.assert_array_equal(tc.edge_support(e), sup0)
+            assert tc.last_stats.method == method
+
+
+def test_distributed_fallback_is_loud(family_graphs):
+    """distributed has no per_node/support kernel: the engine must run the
+    wedge backend, record fallback_reason, and warn once."""
+    import warnings
+
+    import jax
+
+    from repro.core.engine import _warned_fallbacks
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    e = family_graphs["kron10"]
+    base = TriangleCounter(method="wedge_bsearch")
+    pn0 = base.per_node(e)
+    _warned_fallbacks.clear()
+    tc = TriangleCounter(method="distributed", mesh=mesh)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        pn = tc.per_node(e)
+    assert [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    np.testing.assert_array_equal(pn, pn0)
+    st = tc.last_stats
+    assert st.method == "wedge_bsearch"
+    assert st.resolved_method == "distributed"
+    assert st.fallback_reason and "per_node" in st.fallback_reason
+    # the warning is one-time per (method, kind) pair
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tc.per_node(e)
+    assert not [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    # count still executes the distributed schedule with no fallback
+    tc.count(e)
+    assert tc.last_stats.method == "distributed"
+    assert tc.last_stats.fallback_reason is None
+
+
+def test_backend_registry_roundtrip():
+    """make_backend resolves registered names; unknown names fail loudly;
+    custom registrations are honored."""
+    from repro.core.engine import (
+        CAPABILITIES,
+        WedgeBackend,
+        make_backend,
+        register_backend,
+        resolve_backend,
+        _BACKEND_FACTORIES,
+    )
+
+    for name, expected in [
+        ("wedge_bsearch", "wedge_bsearch"),
+        ("panel", "panel"),
+        ("pallas", "pallas"),
+        ("distributed", "distributed"),
+    ]:
+        assert make_backend(name).name == expected
+    with pytest.raises(ValueError):
+        make_backend("nope")
+    with pytest.raises(ValueError):
+        resolve_backend("wedge_bsearch", "frobnicate")
+    assert set(CAPABILITIES) == {"count", "per_node", "support"}
+    register_backend("test_custom", lambda widths, tuner: WedgeBackend())
+    try:
+        assert make_backend("test_custom").name == "wedge_bsearch"
+    finally:
+        del _BACKEND_FACTORIES["test_custom"]
 
 
 def test_peak_buffer_is_true_chunk_load(family_graphs):

@@ -177,6 +177,39 @@ def test_delete_never_inserted_edge():
     assert ctr.count == 0 and ctr.n_edges == 2
 
 
+def test_probe_backend_method_axis(stream_graphs):
+    """The acceptance criterion for streams: incremental deltas are
+    bit-identical across wedge/panel/pallas probe backends at ≥2 chunk
+    budgets, with the stats proving which backend ran the probes."""
+    e = stream_graphs["kron8"]
+    for budget in (None, 2048):
+        ctrs = {
+            m: IncrementalTriangleCounter(max_wedge_chunk=budget, method=m)
+            for m in ("wedge_bsearch", "panel", "pallas")
+        }
+        for batch in sliding_window_stream(e, window=500, batch_size=250, seed=7):
+            deltas = {
+                m: c.apply(insert=batch.insert, delete=batch.delete)
+                for m, c in ctrs.items()
+            }
+            assert len(set(deltas.values())) == 1, (budget, deltas)
+        for m, c in ctrs.items():
+            assert c.last_update_stats.probe_method == m
+            assert c.count == ctrs["wedge_bsearch"].count
+            np.testing.assert_array_equal(
+                c.per_node(), ctrs["wedge_bsearch"].per_node()
+            )
+        assert ctrs["wedge_bsearch"].count == oracle(ctrs["wedge_bsearch"])
+
+
+def test_auto_method_keeps_wedge_probes():
+    """method="auto" (the serving default) probes on the wedge backend."""
+    ctr = IncrementalTriangleCounter(method="auto")
+    ctr.insert([[0, 1], [1, 2], [0, 2]])
+    assert ctr.last_update_stats.probe_method == "wedge_bsearch"
+    assert ctr.count == 1
+
+
 def test_budget_below_single_delta_fanout(stream_graphs):
     """max_wedge_chunk=1 cannot split one edge's adjacency: the probe
     buffer is bumped to the max fan-out and the count stays exact."""

@@ -1,4 +1,10 @@
-"""Pallas triangle-intersection kernel vs jnp oracle: shape/dtype sweep."""
+"""Pallas triangle-intersection kernel family vs jnp oracles.
+
+Interpret-mode parity for every member — scalar count, per-node
+(count + arm) and support (count + arm + closure) — across bucket
+widths, including all-padding tiles, empty buckets and explicit tile
+overrides (the autotuner's hook).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,8 +14,16 @@ except ImportError:  # container image has no hypothesis; use the local stub
     from _hypothesis_stub import given, settings, st
 
 from repro.core import bucketize_edges, count_triangles, gather_panels, preprocess
-from repro.kernels.triangle_count import intersect_count_pallas
-from repro.kernels.triangle_count.ref import intersect_count_ref
+from repro.kernels.triangle_count import (
+    intersect_count_pallas,
+    intersect_per_node_pallas,
+    intersect_support_pallas,
+)
+from repro.kernels.triangle_count.ref import (
+    intersect_count_ref,
+    intersect_per_node_ref,
+    intersect_support_ref,
+)
 
 
 def random_panels(rng, b, l, dtype):
@@ -19,6 +33,21 @@ def random_panels(rng, b, l, dtype):
         vals = np.sort(rng.choice(4 * l + 8, size=n, replace=False))
         rows.append(np.concatenate([vals, -np.ones(l - n)]).astype(dtype))
     return jnp.asarray(np.stack(rows))
+
+
+def assert_family_matches_ref(a, c):
+    """All three kernels agree with their oracles on one panel pair."""
+    ref_cnt, ref_arm, ref_clo = intersect_support_ref(a, c)
+    np.testing.assert_array_equal(
+        np.asarray(intersect_count_pallas(a, c)), np.asarray(ref_cnt)
+    )
+    cnt, arm = intersect_per_node_pallas(a, c)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(ref_cnt))
+    np.testing.assert_array_equal(np.asarray(arm), np.asarray(ref_arm))
+    cnt, arm, clo = intersect_support_pallas(a, c)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(ref_cnt))
+    np.testing.assert_array_equal(np.asarray(arm), np.asarray(ref_arm))
+    np.testing.assert_array_equal(np.asarray(clo), np.asarray(ref_clo))
 
 
 @pytest.mark.parametrize("dtype", [np.int32, np.int16])
@@ -34,6 +63,47 @@ def test_kernel_matches_ref(b, lu, lv, dtype, rng):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
 
 
+@pytest.mark.parametrize(
+    "b,lu,lv",
+    [(1, 8, 8), (5, 16, 64), (32, 128, 128), (9, 256, 1024), (2, 2048, 128), (64, 64, 32)],
+)
+def test_attribution_kernels_match_ref(b, lu, lv, rng):
+    """Per-node and support kernels: every axis reduction matches the
+    oracle across bucket widths (incl. v-tiling past TLv=512)."""
+    a = random_panels(rng, b, lu, np.int32)
+    c = random_panels(rng, b, lv, np.int32)
+    assert_family_matches_ref(a, c)
+
+
+def test_arm_closure_consistency(rng):
+    """count == Σ arm == Σ closure row-wise — the 3-edge billing identity."""
+    a = random_panels(rng, 17, 96, np.int32)
+    c = random_panels(rng, 17, 160, np.int32)
+    cnt, arm, clo = intersect_support_pallas(a, c)
+    np.testing.assert_array_equal(
+        np.asarray(cnt), np.asarray(arm).sum(axis=1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cnt), np.asarray(clo).sum(axis=1)
+    )
+
+
+def test_explicit_tile_override_parity(rng):
+    """tiles=(TB, TLv) overrides (the autotuner hook) never change results."""
+    a = random_panels(rng, 23, 64, np.int32)
+    c = random_panels(rng, 23, 640, np.int32)
+    ref_cnt, ref_arm, ref_clo = intersect_support_ref(a, c)
+    for tiles in [(1, 128), (8, 256), (64, 512), (256, 4096)]:
+        cnt, arm, clo = intersect_support_pallas(a, c, tiles=tiles)
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(ref_cnt)), tiles
+        np.testing.assert_array_equal(np.asarray(arm), np.asarray(ref_arm))
+        np.testing.assert_array_equal(np.asarray(clo), np.asarray(ref_clo))
+        np.testing.assert_array_equal(
+            np.asarray(intersect_count_pallas(a, c, tiles=tiles)),
+            np.asarray(ref_cnt),
+        )
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 17), st.sampled_from([8, 32, 96]), st.sampled_from([8, 48, 128]),
        st.integers(0, 2**31 - 1))
@@ -41,9 +111,7 @@ def test_kernel_property(b, lu, lv, seed):
     rng = np.random.default_rng(seed)
     a = random_panels(rng, b, lu, np.int32)
     c = random_panels(rng, b, lv, np.int32)
-    np.testing.assert_array_equal(
-        np.asarray(intersect_count_ref(a, c)), np.asarray(intersect_count_pallas(a, c))
-    )
+    assert_family_matches_ref(a, c)
 
 
 def test_degree_skew_bucketing(small_graphs):
@@ -55,13 +123,23 @@ def test_degree_skew_bucketing(small_graphs):
     buckets = bucketize_edges(csr)
     assert sum(len(v) for v in buckets.values()) == csr.col.shape[0]
     total = 0
+    total_arm = 0
     for width, idx in buckets.items():
         a, b, al, bl = gather_panels(csr, jnp.asarray(idx), width)
         total += int(np.asarray(intersect_count_pallas(a, b)).sum())
+        _, arm = intersect_per_node_pallas(a, b)
+        total_arm += int(np.asarray(arm).sum())
     assert total == count_triangles(e)
+    assert total_arm == total  # each hit has exactly one arm slot
 
 
 def test_empty_rows():
+    """All-padding tiles: every kernel sees only −1 and yields zeros."""
     a = jnp.full((4, 16), -1, jnp.int32)
     b = jnp.full((4, 8), -1, jnp.int32)
     assert (np.asarray(intersect_count_pallas(a, b)) == 0).all()
+    cnt, arm = intersect_per_node_pallas(a, b)
+    assert (np.asarray(cnt) == 0).all() and (np.asarray(arm) == 0).all()
+    cnt, arm, clo = intersect_support_pallas(a, b)
+    assert (np.asarray(cnt) == 0).all()
+    assert (np.asarray(arm) == 0).all() and (np.asarray(clo) == 0).all()

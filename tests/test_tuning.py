@@ -1,0 +1,122 @@
+"""Tile autotuner: candidate grid, cache round-trip, engine integration.
+
+The acceptance smoke: a cold tune writes the versioned cache, a warm
+load picks the *identical* tiles without re-measuring, and tuned tiles
+never change kernel results (only their speed).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.tuning import (
+    CACHE_VERSION,
+    AutoTuner,
+    TileCache,
+    TileConfig,
+    autotune_tiles,
+    candidate_tiles,
+    shape_key,
+)
+
+
+def test_candidate_grid_respects_vmem_budget():
+    for (n, lu, lv) in [(32, 16, 16), (512, 256, 1024), (8, 4096, 4096)]:
+        cands = candidate_tiles(n, lu, lv)
+        assert cands, (n, lu, lv)
+        for c in cands:
+            assert c.block_edges * lu * min(c.tlv, lv) <= (1 << 21), (c, n, lu, lv)
+            assert 1 <= c.block_edges <= max(n, 256)
+
+
+def test_shape_key_pow2_buckets():
+    assert shape_key(33, 64, 64) == shape_key(64, 64, 64)
+    assert shape_key(64, 64, 64) != shape_key(65, 64, 64)
+    assert shape_key(1, 16, 32) == "B1xLu16xLv32"
+
+
+def test_cold_tune_then_warm_load_identical_tiles(tmp_path):
+    """The CI acceptance smoke: cold tune → cache write → warm load picks
+    the identical tiles (no re-measure, hit counted)."""
+    path = tmp_path / "tiles.json"
+    tuner = AutoTuner(path, tune_on_miss=True, iters=1)
+    tiles_cold = tuner.tiles(24, 16, 16)
+    assert tiles_cold is not None
+    assert tuner.n_tuned == 1 and tuner.n_hits == 0
+    assert path.exists()
+    payload = json.loads(path.read_text())
+    assert payload["version"] == CACHE_VERSION
+    assert shape_key(24, 16, 16) in payload["entries"]
+    # warm: a fresh tuner that may NOT tune must serve the same pick
+    warm = AutoTuner(path, tune_on_miss=False)
+    assert warm.cache.loaded_from_disk
+    tiles_warm = warm.tiles(24, 16, 16)
+    assert tiles_warm == tiles_cold
+    assert warm.n_hits == 1 and warm.n_tuned == 0
+    # same pow2 bucket (24 and 17 both round to B32) → same entry, no
+    # new tuning even with tune_on_miss enabled
+    again = AutoTuner(path, tune_on_miss=True, iters=1)
+    assert again.tiles(17, 16, 16) == tiles_cold
+    assert again.n_tuned == 0
+
+
+def test_cache_discards_version_mismatch(tmp_path):
+    path = tmp_path / "tiles.json"
+    cache = TileCache(path)
+    cache.put(shape_key(8, 16, 16), TileConfig(4, 128, 1.0))
+    cache.save()
+    payload = json.loads(path.read_text())
+    payload["version"] = CACHE_VERSION + 1
+    path.write_text(json.dumps(payload))
+    stale = TileCache(path)
+    assert not stale.loaded_from_disk and not stale.entries
+
+
+def test_cache_discards_backend_mismatch(tmp_path):
+    path = tmp_path / "tiles.json"
+    cache = TileCache(path)
+    cache.put(shape_key(8, 16, 16), TileConfig(4, 128, 1.0))
+    cache.save()
+    payload = json.loads(path.read_text())
+    payload["backend"] = "not-a-backend"
+    path.write_text(json.dumps(payload))
+    stale = TileCache(path)
+    assert not stale.loaded_from_disk and not stale.entries
+
+
+def test_cache_survives_corrupt_file(tmp_path):
+    path = tmp_path / "tiles.json"
+    path.write_text("{ this is not json")
+    cache = TileCache(path)  # must not raise
+    assert not cache.entries
+    cache.put("k", TileConfig(8, 128))
+    cache.save()
+    assert TileCache(path).get("k") == TileConfig(8, 128, 0.0)
+
+
+def test_autotune_result_is_admissible():
+    cfg = autotune_tiles(8, 16, 16, iters=1, warmup=0)
+    assert cfg.block_edges * 16 * min(cfg.tlv, 16) <= (1 << 21)
+    assert cfg.us > 0.0
+
+
+def test_tuned_engine_matches_untuned(tmp_path, small_graphs):
+    """A tuner-steered pallas counter is bit-identical to the untuned one
+    and actually consults the cache."""
+    from repro.core import TriangleCounter
+
+    e = small_graphs["kron"]
+    base = TriangleCounter(method="pallas")
+    expect = base.count(e)
+    pn0 = base.per_node(e)
+    tuner = AutoTuner(tmp_path / "tiles.json", tune_on_miss=True, iters=1)
+    tc = TriangleCounter(method="pallas", tuner=tuner)
+    assert tc.count(e) == expect
+    np.testing.assert_array_equal(tc.per_node(e), pn0)
+    assert tuner.n_tuned + tuner.n_hits > 0
+    # warm run, fresh process-level state: cache hits only
+    warm_tuner = AutoTuner(tmp_path / "tiles.json", tune_on_miss=False)
+    tc2 = TriangleCounter(method="pallas", tuner=warm_tuner)
+    assert tc2.count(e) == expect
+    assert warm_tuner.n_hits > 0 and warm_tuner.n_tuned == 0
