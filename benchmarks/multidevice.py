@@ -2,7 +2,11 @@
 
 Runs in a subprocess with 8 fake CPU devices; reports per-phase times and
 the preprocessing fraction that bounds multi-device speedup (the paper
-measures 0.08–0.76 across graphs).
+measures 0.08–0.76 across graphs).  Beyond the global count, the striped
+backend now carries every engine workload, so the table also times
+per-node, per-edge support and a full truss decomposition striped vs
+single-device — each row identity-asserted against the wedge schedule
+before it is reported (a fast wrong kernel scores zero).
 """
 from __future__ import annotations
 
@@ -36,6 +40,39 @@ for name, edges in [("kronecker-11", kronecker_rmat(11, seed=0)),
     frac = pre / max(total8, 1e-9)
     out[name] = dict(pre_us=pre*1e6, total8_us=total8*1e6, total1_us=total1*1e6,
                      amdahl_frac=frac, triangles=int(t1))
+
+# --- full-workload striped vs single-device (identity-asserted) -----------
+from repro.core import TriangleCounter
+from repro.analytics.truss import k_truss_decomposition
+
+e10 = kronecker_rmat(10, seed=0)
+dist = TriangleCounter(method="distributed", mesh=mesh)
+ref = TriangleCounter(method="wedge_bsearch")
+workloads = {}
+for kind in ("per_node", "support"):
+    d_fn = dist.per_node if kind == "per_node" else dist.edge_support
+    r_fn = ref.per_node if kind == "per_node" else ref.edge_support
+    a = d_fn(e10); b = r_fn(e10)  # warm + identity
+    assert np.array_equal(a, b), kind
+    assert dist.last_stats.method == "distributed"
+    t0 = time.perf_counter(); d_fn(e10); t8 = time.perf_counter() - t0
+    t0 = time.perf_counter(); r_fn(e10); t1 = time.perf_counter() - t0
+    workloads[kind] = dict(dist_us=t8*1e6, wedge_us=t1*1e6,
+                           n_stripes=dist.last_stats.n_stripes)
+
+e9 = kronecker_rmat(9, edge_factor=8, seed=2)
+td = k_truss_decomposition(e9, method="distributed", mesh=mesh)  # warm
+tw = k_truss_decomposition(e9, method="wedge_bsearch")
+assert td.spectrum() == tw.spectrum()
+t0 = time.perf_counter()
+td = k_truss_decomposition(e9, method="distributed", mesh=mesh)
+t8 = time.perf_counter() - t0
+t0 = time.perf_counter()
+tw = k_truss_decomposition(e9, method="wedge_bsearch")
+t1 = time.perf_counter() - t0
+workloads["truss"] = dict(dist_us=t8*1e6, wedge_us=t1*1e6,
+                          max_k=td.max_k, rounds=td.rounds)
+out["workloads"] = workloads
 print(json.dumps(out))
 """
 
@@ -52,10 +89,17 @@ def run():
         rows.append(("multidevice/FAILED", 0.0, r.stderr.strip().splitlines()[-1][:80]))
         return rows
     data = json.loads(r.stdout.strip().splitlines()[-1])
+    workloads = data.pop("workloads", {})
     for name, d in data.items():
         max_speedup = 1.0 / max(d["amdahl_frac"], 1e-9)
         rows.append((f"multidevice/{name}/8dev", d["total8_us"],
                      f"T={d['triangles']};amdahl_frac={d['amdahl_frac']:.2f};"
                      f"max_speedup={min(max_speedup, 8):.2f}x"))
         rows.append((f"multidevice/{name}/1dev", d["total1_us"], "-"))
+    for kind, d in workloads.items():
+        extra = ";".join(
+            f"{k}={v}" for k, v in d.items() if k not in ("dist_us", "wedge_us")
+        )
+        rows.append((f"multidevice/{kind}/striped-8dev", d["dist_us"], extra or "-"))
+        rows.append((f"multidevice/{kind}/wedge-1dev", d["wedge_us"], "-"))
     return rows

@@ -69,6 +69,8 @@ def support_on_arrays(
     bucket_pow2: bool = False,
     method: str = "wedge_bsearch",
     tuner=None,
+    mesh=None,
+    shorter_side: bool = False,
 ) -> SupportRun:
     """Per-directed-edge support over raw oriented-CSR arrays.
 
@@ -76,14 +78,18 @@ def support_on_arrays(
     ``src``/``col`` may carry a −1-padded tail (pow2 shape bucketing —
     padded slots produce zero support and are sliced off by the caller).
     ``method`` picks the kernel backend (``"auto"`` resolves against the
-    out-degree histogram); planning, padding and pow2 bucketing are the
-    backend's — this function only adds the int64 accumulation.
+    out-degree histogram, and routes to the §III-E striped backend when
+    a multi-device ``mesh`` is given); planning, padding and pow2
+    bucketing are the backend's — this function only adds the int64
+    accumulation.
     """
     src_np = np.asarray(src)
     if src_np.shape[0] == 0:
         return SupportRun(np.zeros((0,), np.int64), 0, 0, 0, "wedge_bsearch", None)
-    resolved = resolve_method(method, out_degree)
-    backend, executed, reason = resolve_backend(resolved, "support", tuner=tuner)
+    resolved = resolve_method(method, out_degree, mesh=mesh)
+    backend, executed, reason = resolve_backend(
+        resolved, "support", tuner=tuner, mesh=mesh, shorter_side=shorter_side
+    )
     work = make_workload(row_offsets, col, out_degree, src, col, n_steps=n_steps)
     sup, plan = run_workload(
         backend, "support", work, budget=max_wedge_chunk, bucket_pow2=bucket_pow2
@@ -141,6 +147,7 @@ def edge_support(
     max_wedge_chunk: int | None = None,
     method: str = "auto",
     counter: TriangleCounter | None = None,
+    mesh=None,
 ) -> EdgeSupport:
     """Per-edge triangle support for any engine-accepted graph input.
 
@@ -154,13 +161,15 @@ def edge_support(
     it with an explicit ``method``/``max_wedge_chunk`` is rejected
     rather than silently ignored.
     """
-    if counter is not None and (method != "auto" or max_wedge_chunk is not None):
+    if counter is not None and (
+        method != "auto" or max_wedge_chunk is not None or mesh is not None
+    ):
         raise ValueError(
-            "pass either counter= (which carries its own method/budget) or "
-            "method=/max_wedge_chunk=, not both"
+            "pass either counter= (which carries its own method/budget/mesh) "
+            "or method=/max_wedge_chunk=/mesh=, not both"
         )
     tc = counter if counter is not None else TriangleCounter(
-        method=method, max_wedge_chunk=max_wedge_chunk
+        method=method, max_wedge_chunk=max_wedge_chunk, mesh=mesh
     )
     csr = prepare_oriented(edges, n_nodes)
     if csr is None:

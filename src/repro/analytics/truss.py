@@ -102,6 +102,7 @@ def k_truss_decomposition(
     *,
     max_wedge_chunk: int | None = None,
     method: str = "auto",
+    mesh=None,
 ) -> TrussDecomposition:
     """Full truss decomposition (per-edge trussness) of a graph.
 
@@ -110,7 +111,11 @@ def k_truss_decomposition(
     recomputation's device wedge buffer exactly as in the engine, and
     ``method`` picks the kernel backend every peel round's support runs
     on (``"auto"`` resolves once, against the *full* graph's degrees, so
-    the whole peel shares one backend and its compiled kernels).
+    the whole peel shares one backend and its compiled kernels).  With a
+    multi-device ``mesh``, every round's support recompute runs the
+    §III-E striped distributed kernels; pow2 bucketing still bounds the
+    peel to O(log m) compiles because the striped kernel cache keys on
+    the bucketed shapes.
     """
     csr = prepare_oriented(edges, n_nodes)
     if csr is None:
@@ -124,11 +129,11 @@ def k_truss_decomposition(
     # under peeling and extra steps are harmless, so every round shares
     # one static n_steps (compile stability)
     steps = search_steps(csr)
-    method = resolve_method(method, csr.out_degree)
+    method = resolve_method(method, csr.out_degree, mesh=mesh)
     trussness = np.full(m, 2, np.int32)
     idx = np.arange(m)
     sup, launches, executed = _alive_support(
-        src0, col0, idx, n, steps, max_wedge_chunk, method
+        src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
     )
     rounds = 1
     k = 3
@@ -143,7 +148,7 @@ def k_truss_decomposition(
                 break
             # removal may cascade: recompute support on the shrunk graph
             sup, n_chunks, executed = _alive_support(
-                src0, col0, idx, n, steps, max_wedge_chunk, method
+                src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
             )
             rounds += 1
             launches += n_chunks
@@ -157,7 +162,7 @@ def k_truss_decomposition(
     )
 
 
-def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk, method):
+def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk, method, mesh=None):
     """Support of the surviving edges, on the filtered (pow2-padded) CSR."""
     sub_src = src0[idx]
     sub_col = col0[idx]
@@ -172,7 +177,7 @@ def _alive_support(src0, col0, idx, n, steps, max_wedge_chunk, method):
     run = support_on_arrays(
         sub_row, sub_src, sub_col, sub_out,
         max_wedge_chunk=max_wedge_chunk, n_steps=steps, bucket_pow2=True,
-        method=method,
+        method=method, mesh=mesh,
     )
     return run.support[: idx.shape[0]], run.n_chunks, run.method
 
@@ -184,6 +189,7 @@ def k_truss_subgraph(
     *,
     max_wedge_chunk: int | None = None,
     method: str = "auto",
+    mesh=None,
 ) -> tuple[np.ndarray, int]:
     """Extract the k-truss as a canonical edge array.
 
@@ -196,7 +202,8 @@ def k_truss_subgraph(
         edges
         if isinstance(edges, TrussDecomposition)
         else k_truss_decomposition(
-            edges, n_nodes, max_wedge_chunk=max_wedge_chunk, method=method
+            edges, n_nodes, max_wedge_chunk=max_wedge_chunk, method=method,
+            mesh=mesh,
         )
     )
     if dec.n_edges == 0:

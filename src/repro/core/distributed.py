@@ -22,6 +22,7 @@ preprocessing fraction exactly as the paper's §III-E does.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Sequence
 
 import jax
@@ -33,7 +34,7 @@ except ImportError:  # jax 0.4.x keeps it under jax.experimental
     from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .count import _batched_contains, segmented_int32_sum
+from .count import _batched_contains, _batched_search, segmented_int32_sum
 from .preprocess import OrientedCSR, preprocess
 
 __all__ = [
@@ -41,10 +42,22 @@ __all__ = [
     "plan_striped_chunks",
     "make_distributed_count_fn",
     "make_distributed_panel_count_fn",
+    "striped_workload_fn",
     "count_triangles_distributed",
     "count_triangles_distributed_csr",
+    "count_triangles_distributed_slabs",
     "count_triangles_distributed_panel",
+    "oriented_csr_from_slabs",
 ]
+
+# jax renamed shard_map's replication-check kwarg; the support kernel's
+# all_gather defeats static replication inference either way, so pass
+# whichever this version accepts with False
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else "check_rep"
+)
 
 
 def stripe_edges(csr: OrientedCSR, n_shards: int, shorter_side: bool = False):
@@ -191,6 +204,137 @@ def make_distributed_count_fn(
         mesh=mesh,
         in_specs=(edge_spec, edge_spec, rep, rep, rep),
         out_specs=P(*axes, None),
+    )
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
+def striped_workload_fn(
+    mesh: Mesh,
+    kind: str,
+    wedge_budget: int,
+    n_search_steps: int,
+    n_out: int = 0,
+    shorter_side: bool = False,
+    narrow_wire: bool = False,
+):
+    """Build (and cache) the jitted striped kernel for one workload kind.
+
+    The §III-E scheme generalized beyond the scalar count: every shard
+    expands/closes wedges for its round-robin edge stripe, then the
+    partials merge by the collective each workload needs —
+
+    ``"count"``
+        per-shard segmented int32 partials, no collective (the host
+        reduces in uint64, as in :func:`make_distributed_count_fn`);
+    ``"per_node"``
+        each shard scatters its hits to the triangle's three vertices in
+        a local ``(n_out,)`` array and the shards ``psum`` — the output
+        is the replicated exact per-node incidence of the chunk;
+    ``"support"``
+        two merges.  Arm ``(u, w)`` and closure ``(v, w)`` contributions
+        land on *global* directed-edge (``col``) indices, so they psum
+        like per-node.  The base ``(u, v)`` contribution belongs to the
+        shard's own stripe: each shard reduces it per local edge column,
+        the ``(cols,)`` vectors ride a delta-compressed ``all_gather``
+        (:func:`repro.distributed.compression.compressed_all_gather_int32`,
+        uint16 wire when ``narrow_wire``), and the gathered ``(S, cols)``
+        block scatters onto stable global edge ids
+        ``(chunk_start + c)·S + s`` — the inverse of the round-robin
+        striping, independent of which device computed what.
+
+    Signature of the returned jitted fn::
+
+        f(src_sh, dst_sh, chunk_start, row_offsets, col, out_degree)
+
+    with ``src_sh``/``dst_sh`` the −1-padded ``(S, cols)`` striped chunk
+    (sharded over every mesh axis), ``chunk_start`` a traced int32 column
+    offset (no recompile per chunk) and the CSR replicated.  Results are
+    bit-identical to the single-device kernels: same wedge enumeration,
+    same closure, integer scatters are order-free.
+
+    Cached by ``functools.lru_cache`` so shape-stable callers (the truss
+    peel's pow2-bucketed rounds, the incremental probes) reuse one
+    compiled kernel per (kind, budget, steps, n_out) across backend
+    instances — compiles stay O(log m) per decomposition.
+    """
+    if kind not in ("count", "per_node", "support"):
+        raise ValueError(f"unknown striped workload kind {kind!r}")
+    from repro.distributed.compression import compressed_all_gather_int32
+
+    axes = tuple(mesh.axis_names)
+    n_shards = int(np.prod(mesh.devices.shape))
+
+    def shard_body(src_e, dst_e, chunk_start, row_offsets, col, out_deg):
+        src_e = src_e.reshape(-1)
+        dst_e = dst_e.reshape(-1)
+        cols = src_e.shape[0]
+        valid_e = src_e >= 0
+        safe_src = jnp.maximum(src_e, 0)
+        safe_dst = jnp.maximum(dst_e, 0)
+        if shorter_side:
+            du = out_deg[safe_src]
+            dv = out_deg[safe_dst]
+            swap = dv < du
+            enum_v = jnp.where(swap, safe_dst, safe_src)
+            probe_v = jnp.where(swap, safe_src, safe_dst)
+            reps = jnp.where(valid_e, jnp.minimum(du, dv), 0)
+        else:
+            enum_v = safe_src
+            probe_v = safe_dst
+            reps = jnp.where(valid_e, out_deg[safe_src], 0)
+        starts = jnp.cumsum(reps) - reps
+        edge_id = jnp.repeat(
+            jnp.arange(cols, dtype=jnp.int32), reps,
+            total_repeat_length=wedge_budget,
+        )
+        pos = jnp.arange(wedge_budget, dtype=jnp.int32) - starts[edge_id]
+        valid = (pos >= 0) & (pos < reps[edge_id])
+        u = enum_v[edge_id]
+        v = probe_v[edge_id]
+        w_idx = jnp.clip(row_offsets[u] + pos, 0, col.shape[0] - 1)
+        w = col[w_idx]
+        found, vw_idx = _batched_search(
+            col, row_offsets[v], row_offsets[v + 1], w, n_search_steps
+        )
+        hit = found & valid
+        if kind == "count":
+            partial = segmented_int32_sum(hit)
+            return partial.reshape((1,) * len(axes) + (-1,))
+        inc = hit.astype(jnp.int32)
+        if kind == "per_node":
+            # w may read a padded/sentinel col slot on non-hit lanes; its
+            # inc is 0 and out-of-range scatter indices drop under jit
+            out = jnp.zeros((n_out,), jnp.int32)
+            out = out.at[u].add(inc, mode="drop")
+            out = out.at[v].add(inc, mode="drop")
+            out = out.at[w].add(inc, mode="drop")
+            return jax.lax.psum(out, axes)
+        # support: arm/closure hit global col indices — psum them; the
+        # base contribution stays stripe-local until the all_gather
+        ac = jnp.zeros((n_out,), jnp.int32)
+        ac = ac.at[w_idx].add(inc, mode="drop")
+        ac = ac.at[vw_idx].add(inc, mode="drop")
+        ac = jax.lax.psum(ac, axes)
+        base = jnp.zeros((cols,), jnp.int32).at[edge_id].add(inc, mode="drop")
+        base_all = compressed_all_gather_int32(base, axes, narrow=narrow_wire)
+        # stripe-offset scatter: column c of gathered stripe s is global
+        # query edge (chunk_start + c)·S + s (inverse round-robin); padded
+        # tail ids land past n_out with zero base and drop
+        c = jnp.arange(cols, dtype=jnp.int32)
+        s = jnp.arange(n_shards, dtype=jnp.int32)
+        gid = (chunk_start + c)[None, :] * n_shards + s[:, None]
+        return ac.at[gid.reshape(-1)].add(base_all.reshape(-1), mode="drop")
+
+    edge_spec = P(axes)
+    rep = P()
+    out_spec = P(*axes, None) if kind == "count" else P()
+    f = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(edge_spec, edge_spec, rep, rep, rep, rep),
+        out_specs=out_spec,
+        **{_CHECK_KW: False},
     )
     return jax.jit(f)
 
@@ -371,3 +515,86 @@ def count_triangles_distributed_panel(
     ]
     partials = fn(*args)
     return int(np.asarray(partials).astype(np.uint64).sum())
+
+
+def oriented_csr_from_slabs(slabs) -> OrientedCSR:
+    """Orient a sharded ``.tricsr`` cache (per-stripe slab views) host-side.
+
+    ``slabs`` are :class:`repro.graphs.io.CSRStripe` views (duck-typed:
+    anything with ``row_offsets``/``col``/``node_lo``/``node_hi``/
+    ``stripe_index``), each memory-mapping only its node-range slab of
+    the undirected CSR.  Degrees come from the concatenated row offsets
+    (tiny — one int64 per node); each slab is then oriented independently
+    with the engine's forward rule ``(du < dv) | ((du == dv) & (u < v))``
+    and the kept edges concatenated.  Because slabs cover contiguous
+    node ranges and each slab's CSR is (src, dst)-sorted, the concat *is*
+    the globally sorted oriented edge list — bit-identical to
+    ``oriented_from_undirected_csr`` of the assembled CSR, without ever
+    materializing the full ``col`` array on one host.
+    """
+    slabs = sorted(slabs, key=lambda s: int(s.stripe_index))
+    if not slabs:
+        raise ValueError("no slabs given")
+    lo = 0
+    for s in slabs:
+        if int(s.node_lo) != lo:
+            raise ValueError(
+                f"slab {s.stripe_index} starts at node {s.node_lo}, expected {lo}"
+            )
+        lo = int(s.node_hi)
+    n = lo
+    row_full = np.concatenate(
+        [np.asarray(s.row_offsets[:-1]) for s in slabs]
+        + [np.asarray(slabs[-1].row_offsets[-1:])]
+    ).astype(np.int64)
+    deg = np.diff(row_full).astype(np.int32)
+    src_parts, col_parts = [], []
+    for s in slabs:
+        lens = np.diff(np.asarray(s.row_offsets)).astype(np.int64)
+        u = np.repeat(
+            np.arange(int(s.node_lo), int(s.node_hi), dtype=np.int32), lens
+        )
+        v = np.asarray(s.col, dtype=np.int32)
+        du, dv = deg[u], deg[v]
+        keep = (du < dv) | ((du == dv) & (u < v))
+        src_parts.append(u[keep])
+        col_parts.append(v[keep])
+    src = np.concatenate(src_parts) if src_parts else np.zeros(0, np.int32)
+    col = np.concatenate(col_parts) if col_parts else np.zeros(0, np.int32)
+    row = np.searchsorted(src, np.arange(n + 1, dtype=np.int64)).astype(np.int32)
+    out_degree = (row[1:] - row[:-1]).astype(np.int32)
+    return OrientedCSR(
+        row_offsets=jnp.asarray(row),
+        src=jnp.asarray(src),
+        col=jnp.asarray(col),
+        out_degree=jnp.asarray(out_degree),
+        degree=jnp.asarray(deg),
+    )
+
+
+def count_triangles_distributed_slabs(
+    slabs,
+    mesh: Mesh,
+    *,
+    shorter_side: bool = False,
+    max_wedge_chunk: int | None = None,
+    stats_out: dict | None = None,
+) -> int:
+    """§III-E count straight from sharded ``.tricsr`` slab views.
+
+    Each device's host memmaps only its slab during orientation
+    (:func:`oriented_csr_from_slabs`); the oriented CSR is then
+    replicated — the paper's scheme — and counted with the striped
+    kernels under the usual wedge budget.
+    """
+    csr = oriented_csr_from_slabs(slabs)
+    if int(np.asarray(csr.src).shape[0]) == 0:
+        if stats_out is not None:
+            stats_out.update(n_chunks=0, peak_wedge_buffer=0, cols_per_chunk=0)
+        return 0
+    return count_triangles_distributed_csr(
+        csr, mesh,
+        shorter_side=shorter_side,
+        max_wedge_chunk=max_wedge_chunk,
+        stats_out=stats_out,
+    )

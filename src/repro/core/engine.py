@@ -31,9 +31,14 @@ runs the batched-binary-search wedge kernels; :class:`PanelBackend`
 equality-tile reductions; :class:`PallasBackend` (``"pallas"``) is the
 same plan driving the Pallas kernel family
 (:mod:`repro.kernels.triangle_count`), optionally steered by a
-:class:`repro.core.tuning.AutoTuner`; ``"distributed"`` supports only
-``count`` (the §III-E striping) — any other workload falls back to the
-wedge backend with an explicit ``EngineStats.fallback_reason`` and a
+:class:`repro.core.tuning.AutoTuner`; :class:`DistributedBackend`
+(``"distributed"``) plans §III-E round-robin edge stripes over every
+mesh device and merges the striped kernels' partials with collectives —
+``psum`` for per-node incidences, a stripe-offset (delta-compressed)
+``all_gather`` for per-edge support — so every workload, including the
+truss peel and the incremental probes, executes genuinely multi-device.
+A backend asked for a workload outside its capability set falls back to
+the wedge backend with an explicit ``EngineStats.fallback_reason`` and a
 one-time ``RuntimeWarning`` instead of a silent substitution.
 
 The shared driver (:func:`run_workload`) is what the analytics
@@ -142,6 +147,7 @@ __all__ = [
     "make_workload",
     "workload_from_csr",
     "WorkPlan",
+    "StripedChunk",
     "run_workload",
     "METHODS",
     "CAPABILITIES",
@@ -213,13 +219,25 @@ class EngineStats:
 
     ``resolved_method`` is what configuration + ``"auto"`` dispatch chose;
     ``method`` is what actually executed.  They differ only when the
-    resolved backend lacks the requested workload capability — e.g. the
-    ``distributed`` backend has no per-node kernel — in which case the
-    engine runs the wedge backend and says so: ``fallback_reason`` holds
-    the human-readable why (and a one-time ``RuntimeWarning`` fires), so
-    capability gaps are never silent.  ``peak_wedge_buffer`` is the
-    largest buffer a launch actually materialized (the max chunk load) —
-    not the requested budget, which lives in ``wedge_budget``.
+    resolved backend lacks the requested workload capability — e.g. a
+    custom-registered count-only backend asked for per-node — in which
+    case the engine runs the wedge backend and says so:
+    ``fallback_reason`` holds the human-readable why (and a one-time
+    ``RuntimeWarning`` fires), so capability gaps are never silent.
+    Stats are cleared at the start of every public engine call, so a
+    stale ``fallback_reason`` never outlives the invocation that earned
+    it.  ``peak_wedge_buffer`` is the largest buffer a launch actually
+    materialized (the max chunk load) — not the requested budget, which
+    lives in ``wedge_budget``.
+
+    The stripe fields describe the §III-E partition when the distributed
+    backend executed (``n_stripes > 1``): ``stripe_skew`` is
+    ``max/mean`` wedge load over stripes (the distributed collectives
+    are synchronous, so load skew *is* timing skew — see
+    :func:`repro.distributed.straggler.stripe_skew_report`), and
+    ``straggler_stripe`` the stripe the median+MAD rule flags (usually
+    ``None``: round-robin striping balances skewed degree
+    distributions).
     """
 
     method: str                  # executed schedule, never "auto"
@@ -230,6 +248,9 @@ class EngineStats:
     total_wedges: int            # Σ fan-out over all directed edges
     n_directed_edges: int
     fallback_reason: str | None = None  # why method != resolved_method
+    n_stripes: int = 1                  # §III-E stripes (1 = single device)
+    stripe_skew: float | None = None    # max/mean stripe wedge load
+    straggler_stripe: int | None = None  # stripe flagged by the MAD rule
 
 
 # ---------------------------------------------------------------------------
@@ -476,6 +497,15 @@ class PanelChunk(NamedTuple):
     width: int
 
 
+class StripedChunk(NamedTuple):
+    """One −1-padded column slice of the §III-E striped edge axis."""
+
+    src: np.ndarray   # (n_stripes, cols) round-robin striped sources
+    dst: np.ndarray
+    start: int        # starting column in the striped axis
+    buffer: int       # static per-shard wedge-buffer length
+
+
 class WorkPlan(NamedTuple):
     """A backend's chunking decision for one workload."""
 
@@ -483,6 +513,8 @@ class WorkPlan(NamedTuple):
     n_chunks: int
     peak_buffer: int   # largest per-launch buffer (slots/elements)
     total_wedges: int  # Σ fan-out over the query edges
+    n_stripes: int = 1                        # §III-E stripes (distributed)
+    stripe_loads: tuple[int, ...] | None = None  # wedge slots per stripe
 
 
 # ---------------------------------------------------------------------------
@@ -711,47 +743,202 @@ class PallasBackend(PanelBackend):
 
 
 class DistributedBackend(KernelBackend):
-    """The §III-E striped multi-device schedule — global counts only.
+    """The §III-E striped multi-device schedule — every workload.
 
-    Counting executes whole-CSR, not chunk-wise: the engine routes it
-    through ``count_triangles_distributed_csr`` (which composes its own
-    striping with the wedge-buffer budget), so this backend declares the
-    ``count`` capability but deliberately does not implement the chunk
-    driver protocol — :func:`run_workload` cannot drive it.  Per-node
-    and support requests fall back to the wedge backend via
-    :func:`resolve_backend`, with the gap recorded in
-    ``EngineStats.fallback_reason``.
+    :meth:`plan` round-robin stripes the query edge list over every mesh
+    device (edge ``i`` on stripe ``i mod S`` — the paper's
+    thread-striping lifted to devices) and cuts the striped axis into
+    column chunks whose *worst stripe* obeys the wedge budget
+    (:func:`repro.core.distributed.plan_striped_chunks`,
+    shorter-side-aware).  The chunk kernels are the ``shard_map``
+    wedge kernels from :func:`repro.core.distributed.striped_workload_fn`:
+    count returns per-shard segmented partials (host uint64 reduce),
+    per-node merges by ``psum``, support merges arm/closure by ``psum``
+    and the stripe-local base by a stripe-offset ``all_gather`` whose
+    int32 payload rides a lossless delta-compressed uint16 wire when the
+    graph's degree bound allows (``compress=True``, the default).
+
+    All three are bit-identical to the wedge backend at any budget and
+    any device count — the tests' simulated-mesh parity wall enforces
+    this.  Results come back replicated, so the shared
+    :func:`run_workload` driver accumulates them exactly like any other
+    backend's.
     """
 
     name = "distributed"
-    capabilities = frozenset({"count"})
+    capabilities = frozenset(CAPABILITIES)
 
-    def plan(self, work, budget, *, bucket_pow2: bool = False):
-        # run_workload always plans first, so this is the loud stop for
-        # any caller trying to drive the distributed schedule chunk-wise
-        raise NotImplementedError(
-            "the distributed schedule counts whole-CSR via "
-            "TriangleCounter(method='distributed', mesh=...).count() / "
-            "repro.core.distributed.count_triangles_distributed_csr — "
-            "it has no chunk plan for run_workload"
+    def __init__(self, mesh=None, *, shorter_side: bool = False, compress: bool = True):
+        self.mesh = mesh
+        self.shorter_side = shorter_side
+        self.compress = compress
+        self.n_shards = (
+            int(np.prod(mesh.devices.shape)) if mesh is not None else 0
         )
+        self._adj_key = None
+        self._adj_dev = None
+        self._adj_bound = 0
+
+    def _require_mesh(self):
+        if self.mesh is None:
+            raise ValueError(
+                "the distributed backend needs a jax.sharding.Mesh; "
+                "construct it via make_backend('distributed', mesh=...) or "
+                "TriangleCounter(method='distributed', mesh=...)"
+            )
+
+    def plan(self, work: Workload, budget: int | None, *, bucket_pow2: bool = False) -> WorkPlan:
+        from .distributed import plan_striped_chunks
+
+        self._require_mesh()
+        src, dst, deg = work.src_host, work.dst_host, work.deg_host
+        m = src.shape[0]
+        S = self.n_shards
+        e_per = max(1, -(-m // S))
+        pad = e_per * S - m
+        src_p = np.concatenate([src.astype(np.int32, copy=False),
+                                np.full(pad, -1, np.int32)])
+        dst_p = np.concatenate([dst.astype(np.int32, copy=False),
+                                np.full(pad, -1, np.int32)])
+        # reshape(e_per, S).T puts edge i on stripe i % S
+        src_sh = np.ascontiguousarray(src_p.reshape(e_per, S).T)
+        dst_sh = np.ascontiguousarray(dst_p.reshape(e_per, S).T)
+        reps = np.where(src_p >= 0, deg[np.maximum(src_p, 0)], 0).astype(np.int64)
+        if self.shorter_side:
+            reps_v = np.where(dst_p >= 0, deg[np.maximum(dst_p, 0)], 0).astype(np.int64)
+            reps = np.minimum(reps, reps_v)
+        stripe_loads = tuple(
+            int(x) for x in reps.reshape(e_per, S).sum(axis=0)
+        )
+        bounds, eff = plan_striped_chunks(
+            src_sh, deg, budget, dst_sh=dst_sh if self.shorter_side else None
+        )
+        cols_per_chunk = max(end - start for start, end in bounds)
+        if bucket_pow2:
+            eff = next_pow2(eff)
+            cols_per_chunk = next_pow2(cols_per_chunk)
+
+        def gen():
+            for start, end in bounds:
+                pad_c = cols_per_chunk - (end - start)
+                s = src_sh[:, start:end]
+                d = dst_sh[:, start:end]
+                if pad_c:
+                    fill = np.full((S, pad_c), -1, np.int32)
+                    s = np.concatenate([s, fill], axis=1)
+                    d = np.concatenate([d, fill], axis=1)
+                yield StripedChunk(
+                    np.ascontiguousarray(s), np.ascontiguousarray(d), start, eff
+                )
+
+        return WorkPlan(
+            gen(), len(bounds), eff, int(reps.sum()),
+            n_stripes=S, stripe_loads=stripe_loads,
+        )
+
+    # -- chunk launch plumbing ---------------------------------------------
+
+    def _device_adj(self, adj: _DeviceAdj):
+        """Replicate the adjacency once per workload (cached by identity)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        key = (id(adj.row_offsets), id(adj.col), id(adj.out_degree))
+        if self._adj_key != key:
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            deg_np = np.asarray(adj.out_degree)
+            self._adj_dev = tuple(
+                jax.device_put(np.asarray(a), rep)
+                for a in (adj.row_offsets, adj.col, adj.out_degree)
+            )
+            self._adj_bound = int(deg_np.max()) if deg_np.size else 0
+            self._adj_key = key
+        return self._adj_dev
+
+    def _put_chunk(self, chunk: StripedChunk):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sh = NamedSharding(self.mesh, PartitionSpec(self.mesh.axis_names))
+        return jax.device_put(chunk.src, sh), jax.device_put(chunk.dst, sh)
+
+    def _fn(self, kind: str, adj: _DeviceAdj, chunk: StripedChunk, n_out: int):
+        from repro.distributed.compression import can_narrow_int32
+
+        from .distributed import striped_workload_fn
+
+        narrow = (
+            kind == "support" and self.compress and can_narrow_int32(self._adj_bound)
+        )
+        return striped_workload_fn(
+            self.mesh, kind, chunk.buffer, adj.n_steps,
+            n_out=n_out, shorter_side=self.shorter_side, narrow_wire=narrow,
+        )
+
+    def count_chunk(self, adj, chunk):
+        self._require_mesh()
+        row, col, deg = self._device_adj(adj)
+        s, d = self._put_chunk(chunk)
+        fn = self._fn("count", adj, chunk, 0)
+        return fn(s, d, jnp.int32(chunk.start), row, col, deg)
+
+    def per_node_chunk(self, adj, chunk, n_out):
+        self._require_mesh()
+        row, col, deg = self._device_adj(adj)
+        s, d = self._put_chunk(chunk)
+        fn = self._fn("per_node", adj, chunk, n_out)
+        return fn(s, d, jnp.int32(chunk.start), row, col, deg)
+
+    def support_chunk(self, adj, chunk, m_out):
+        self._require_mesh()
+        if m_out != int(adj.col.shape[0]):
+            raise ValueError(
+                f"distributed support needs the query list aligned with the "
+                f"adjacency edge list (m_out={m_out} != |col|={int(adj.col.shape[0])})"
+            )
+        row, col, deg = self._device_adj(adj)
+        s, d = self._put_chunk(chunk)
+        fn = self._fn("support", adj, chunk, m_out)
+        return fn(s, d, jnp.int32(chunk.start), row, col, deg)
 
 
 _BACKEND_FACTORIES: dict[str, object] = {}
 
 
 def register_backend(name: str, factory) -> None:
-    """Register ``factory(widths=..., tuner=...) -> KernelBackend``."""
+    """Register a backend factory under ``name``.
+
+    The factory is called with keyword arguments
+    ``factory(widths=..., tuner=..., mesh=..., shorter_side=...)`` and
+    must return a :class:`KernelBackend`; accept ``**_`` for the knobs
+    the backend does not use.  A registered name is directly usable as
+    ``TriangleCounter(method=name)``.
+    """
     _BACKEND_FACTORIES[name] = factory
 
 
-register_backend("wedge_bsearch", lambda widths, tuner: WedgeBackend())
-register_backend("panel", lambda widths, tuner: PanelBackend(widths=widths))
-register_backend("pallas", lambda widths, tuner: PallasBackend(widths=widths, tuner=tuner))
-register_backend("distributed", lambda widths, tuner: DistributedBackend())
+register_backend("wedge_bsearch", lambda **_: WedgeBackend())
+register_backend("panel", lambda widths=DEFAULT_WIDTHS, **_: PanelBackend(widths=widths))
+register_backend(
+    "pallas",
+    lambda widths=DEFAULT_WIDTHS, tuner=None, **_: PallasBackend(
+        widths=widths, tuner=tuner
+    ),
+)
+register_backend(
+    "distributed",
+    lambda mesh=None, shorter_side=False, **_: DistributedBackend(
+        mesh, shorter_side=shorter_side
+    ),
+)
 
 
-def make_backend(name: str, *, widths=DEFAULT_WIDTHS, tuner=None) -> KernelBackend:
+def make_backend(
+    name: str,
+    *,
+    widths=DEFAULT_WIDTHS,
+    tuner=None,
+    mesh=None,
+    shorter_side: bool = False,
+) -> KernelBackend:
     """Instantiate the backend registered under ``name``."""
     try:
         factory = _BACKEND_FACTORIES[name]
@@ -760,28 +947,46 @@ def make_backend(name: str, *, widths=DEFAULT_WIDTHS, tuner=None) -> KernelBacke
             f"unknown kernel backend {name!r}; registered: "
             f"{sorted(_BACKEND_FACTORIES)}"
         ) from None
-    return factory(widths, tuner)
+    return factory(widths=widths, tuner=tuner, mesh=mesh, shorter_side=shorter_side)
 
 
 _warned_fallbacks: set = set()
 
 
-def resolve_backend(method: str, kind: str, *, widths=DEFAULT_WIDTHS, tuner=None):
+def resolve_backend(
+    method: str,
+    kind: str,
+    *,
+    widths=DEFAULT_WIDTHS,
+    tuner=None,
+    mesh=None,
+    shorter_side: bool = False,
+):
     """Pick the backend for (schedule, workload) by capability.
 
     Returns ``(backend, executed_name, fallback_reason)``.  When the
-    requested backend lacks ``kind``, the wedge backend substitutes and
-    the reason is returned (plus a one-time ``RuntimeWarning`` per
+    requested backend lacks ``kind`` — or the distributed schedule is
+    requested without a mesh — the wedge backend substitutes and the
+    reason is returned (plus a one-time ``RuntimeWarning`` per
     (method, kind) pair per process) — capability gaps are loud.
     """
     if kind not in CAPABILITIES:
         raise ValueError(f"unknown workload kind {kind!r}; expected one of {CAPABILITIES}")
-    backend = make_backend(method, widths=widths, tuner=tuner)
-    if kind in backend.capabilities:
-        return backend, method, None
-    reason = (
-        f"backend {method!r} has no {kind!r} kernel; fell back to 'wedge_bsearch'"
-    )
+    reason = None
+    if method == "distributed" and mesh is None:
+        reason = (
+            "backend 'distributed' needs a mesh and none was configured; "
+            "fell back to 'wedge_bsearch'"
+        )
+    else:
+        backend = make_backend(
+            method, widths=widths, tuner=tuner, mesh=mesh, shorter_side=shorter_side
+        )
+        if kind in backend.capabilities:
+            return backend, method, None
+        reason = (
+            f"backend {method!r} has no {kind!r} kernel; fell back to 'wedge_bsearch'"
+        )
     key = (method, kind)
     if key not in _warned_fallbacks:
         _warned_fallbacks.add(key)
@@ -951,8 +1156,11 @@ class TriangleCounter:
         shorter_side: bool = False,
         tuner=None,
     ):
-        if method not in METHODS:
-            raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+        if method not in METHODS and method not in _BACKEND_FACTORIES:
+            raise ValueError(
+                f"unknown method {method!r}; expected one of {METHODS} "
+                f"or a registered backend ({sorted(_BACKEND_FACTORIES)})"
+            )
         if method == "distributed" and mesh is None:
             raise ValueError("method='distributed' requires a mesh")
         if max_wedge_chunk is not None and max_wedge_chunk < 1:
@@ -976,24 +1184,23 @@ class TriangleCounter:
         e.g. ``repro.graphs.io.CSRGraph`` loaded from a ``.tricsr`` file —
         oriented by a host-side filter, never re-canonicalized).
         """
+        self.last_stats = None
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             return 0
-        resolved = self._resolve(csr)
-        if resolved == "distributed":
-            return self._count_distributed(csr)
-        return self._run(csr, "count", resolved)
+        return self._run(csr, "count", self._resolve(csr))
 
     def per_node(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Per-vertex triangle incidences, int64 host array.
 
         Runs whichever backend the configured/dispatched schedule
         registers — the panel and Pallas backends scatter their arm
-        attributions natively, so ``method="pallas"`` genuinely executes
-        the Pallas kernels here.  Only the ``distributed`` schedule
-        lacks a per-node kernel; it falls back to the wedge backend with
-        an explicit ``fallback_reason`` + one-time warning.
+        attributions natively, and the distributed backend psum-merges
+        per-stripe scatters — so ``method="pallas"`` genuinely executes
+        the Pallas kernels here and ``method="distributed"`` genuinely
+        executes on every mesh device.
         """
+        self.last_stats = None
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
@@ -1008,6 +1215,7 @@ class TriangleCounter:
         totals) lives in :func:`repro.analytics.support.edge_support`,
         which routes through this method.
         """
+        self.last_stats = None
         csr = self._prepare(edges, n_nodes)
         if csr is None:
             return np.zeros((0,), np.int64)
@@ -1068,7 +1276,15 @@ class TriangleCounter:
         return search_steps(csr)
 
     def _record(self, method, n_chunks, peak, total_wedges, m_dir,
-                resolved=None, fallback_reason=None):
+                resolved=None, fallback_reason=None, stripe_loads=None,
+                n_stripes=1):
+        skew = straggler = None
+        if stripe_loads is not None:
+            from repro.distributed.straggler import stripe_skew_report
+
+            rep = stripe_skew_report(stripe_loads)
+            skew = rep.skew
+            straggler = rep.straggler_stripe
         self.last_stats = EngineStats(
             method=method,
             resolved_method=resolved or method,
@@ -1078,12 +1294,16 @@ class TriangleCounter:
             total_wedges=total_wedges,
             n_directed_edges=m_dir,
             fallback_reason=fallback_reason,
+            n_stripes=n_stripes,
+            stripe_skew=skew,
+            straggler_stripe=straggler,
         )
 
     def _run(self, csr: OrientedCSR, kind: str, resolved: str):
         """Dispatch one workload through the capability-resolved backend."""
         backend, executed, reason = resolve_backend(
-            resolved, kind, widths=self.widths, tuner=self.tuner
+            resolved, kind, widths=self.widths, tuner=self.tuner,
+            mesh=self.mesh, shorter_side=self.shorter_side,
         )
         work = workload_from_csr(csr)
         value, plan = run_workload(
@@ -1094,28 +1314,6 @@ class TriangleCounter:
         self._record(
             executed, plan.n_chunks, plan.peak_buffer, plan.total_wedges,
             csr.n_directed_edges, resolved=resolved, fallback_reason=reason,
+            stripe_loads=plan.stripe_loads, n_stripes=plan.n_stripes,
         )
         return value
-
-    # -- distributed schedule -----------------------------------------------
-
-    def _count_distributed(self, csr: OrientedCSR) -> int:
-        from .distributed import count_triangles_distributed_csr
-
-        stats: dict = {}
-        total = count_triangles_distributed_csr(
-            csr, self.mesh,
-            shorter_side=self.shorter_side,
-            max_wedge_chunk=self.max_wedge_chunk,
-            stats_out=stats,
-        )
-        out_deg = np.asarray(csr.out_degree)
-        total_wedges = int(out_deg[np.asarray(csr.src)].astype(np.int64).sum())
-        self._record(
-            "distributed",
-            stats.get("n_chunks", 1),
-            stats.get("peak_wedge_buffer", 0),
-            total_wedges,
-            csr.n_directed_edges,
-        )
-        return total

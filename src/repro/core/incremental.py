@@ -77,10 +77,12 @@ from repro.graphs.formats import validate_node_ids
 
 __all__ = ["IncrementalTriangleCounter", "UpdateStats"]
 
-# schedules the probe passes can execute; anything else ("auto",
-# "distributed") keeps the wedge chunk kernels, whose shape-stability
-# properties are the serving default
-_PROBE_METHODS = ("wedge_bsearch", "panel", "pallas")
+# schedules the probe passes can execute; anything else ("auto") keeps
+# the wedge chunk kernels, whose shape-stability properties are the
+# serving default.  "distributed" additionally needs a mesh — the three
+# probes then run the §III-E striped kernels with psum-merged per-node
+# partials.
+_PROBE_METHODS = ("wedge_bsearch", "panel", "pallas", "distributed")
 
 _MASK32 = np.int64(0xFFFFFFFF)
 _COL_PAD = np.int32(2**31 - 1)  # sorted-tail sentinel; never inside a row
@@ -123,12 +125,18 @@ class IncrementalTriangleCounter:
     method:
         Engine schedule for the bootstrap count and — when it names one
         of the probe-capable backends (``"wedge_bsearch"``, ``"panel"``,
-        ``"pallas"``) — for the three probe passes of every update
-        batch as well.  ``"auto"`` keeps the probes on the wedge chunk
-        kernels (the serving default: their buffer shapes are the most
-        compile-stable under a fixed budget); the panel/Pallas backends
-        pow2-pad their bucket slices so steady-state serving still
-        reuses a bounded set of compiled kernels.
+        ``"pallas"``, ``"distributed"``) — for the three probe passes of
+        every update batch as well.  ``"auto"`` keeps the probes on the
+        wedge chunk kernels (the serving default: their buffer shapes
+        are the most compile-stable under a fixed budget); the
+        panel/Pallas backends pow2-pad their bucket slices so
+        steady-state serving still reuses a bounded set of compiled
+        kernels.
+    mesh:
+        Device mesh for ``method="distributed"`` (required then,
+        ignored otherwise): each probe pass stripes the delta workload
+        §III-E-style across the mesh and psum-merges the per-node
+        partials — bit-identical to the single-device probes.
 
     After any update, :attr:`last_update_stats` describes what ran.
 
@@ -143,12 +151,19 @@ class IncrementalTriangleCounter:
         n_nodes: int | None = None,
         max_wedge_chunk: int | None = None,
         method: str = "auto",
+        mesh=None,
     ):
         if max_wedge_chunk is not None and max_wedge_chunk < 1:
             raise ValueError("max_wedge_chunk must be positive")
+        if method == "distributed" and mesh is None:
+            raise ValueError(
+                "method='distributed' needs a mesh= over the participating "
+                "devices"
+            )
         self.max_wedge_chunk = max_wedge_chunk
+        self.mesh = mesh
         self.probe_method = method if method in _PROBE_METHODS else "wedge_bsearch"
-        self._backend = make_backend(self.probe_method)
+        self._backend = make_backend(self.probe_method, mesh=mesh)
         self._n = int(n_nodes) if n_nodes else 0
         self._adj = np.empty(0, np.int64)  # sorted directed keys, both dirs
         self._count = 0
@@ -165,7 +180,9 @@ class IncrementalTriangleCounter:
                 )
                 np.add.at(self._deg, und[:, 0], 1)
                 np.add.at(self._deg, und[:, 1], 1)
-                tc = TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk)
+                tc = TriangleCounter(
+                    method=method, max_wedge_chunk=max_wedge_chunk, mesh=mesh
+                )
                 canon = self.current_edges()
                 self._count = tc.count(canon, n_nodes=self._n)
                 self._per_node = tc.per_node(canon, n_nodes=self._n).astype(np.int64)
@@ -363,9 +380,9 @@ class IncrementalTriangleCounter:
         if col_pad > m_valid:
             col = np.concatenate([col, np.full(col_pad - m_valid, _COL_PAD)])
         if self.probe_method != "wedge_bsearch":
-            # panel/pallas probe: the backend buckets the probe pairs by
-            # neighbor-panel width and pow2-pads each slice — its own
-            # compile-stability discipline
+            # panel/pallas/distributed probe: the backend buckets (or
+            # stripes) the probe pairs itself and pow2-pads its launch
+            # shapes — its own compile-stability discipline
             work = make_workload(row, col, deg, eu, ev)
             per_node, plan = run_workload(
                 self._backend, "per_node", work,

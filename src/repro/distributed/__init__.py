@@ -1,7 +1,15 @@
 """Distributed runtime: sharding rules, compression, straggler handling."""
 from .sharding import ShardingRules, make_param_shardings, LM_RULES, spec_for
-from .compression import compressed_psum, make_error_feedback_state, compress_grads
-from .straggler import StragglerMonitor
+from .compression import (
+    compressed_psum,
+    make_error_feedback_state,
+    compress_grads,
+    zigzag_encode,
+    zigzag_decode,
+    can_narrow_int32,
+    compressed_all_gather_int32,
+)
+from .straggler import StragglerMonitor, StripeSkewReport, stripe_skew_report
 
 __all__ = [
     "ShardingRules",
@@ -11,5 +19,11 @@ __all__ = [
     "compressed_psum",
     "make_error_feedback_state",
     "compress_grads",
+    "zigzag_encode",
+    "zigzag_decode",
+    "can_narrow_int32",
+    "compressed_all_gather_int32",
     "StragglerMonitor",
+    "StripeSkewReport",
+    "stripe_skew_report",
 ]

@@ -1,21 +1,30 @@
-"""Straggler detection for the training loop.
+"""Straggler detection: training-step timing and engine stripe skew.
 
 On a real pod a straggling host shows up as a slow step for *everyone*
-(collectives are synchronous).  The monitor keeps a robust running
-estimate (median + MAD over a sliding window) of step wall time and flags
-anomalies; the train loop's hook decides what to do with a flag —
-log-and-continue, checkpoint-now (before a suspected failing host dies),
-or trigger an elastic re-mesh.  The decision logic is host-side and fully
-unit-testable without hardware.
+(collectives are synchronous).  :class:`StragglerMonitor` keeps a robust
+running estimate (median + MAD over a sliding window) of step wall time
+and flags anomalies; the train loop's hook decides what to do with a
+flag — log-and-continue, checkpoint-now (before a suspected failing host
+dies), or trigger an elastic re-mesh.
+
+:func:`stripe_skew_report` is the triangle engine's counterpart for the
+§III-E striped edge partition: because the distributed kernels are
+synchronous collectives, a stripe with an outsized wedge load *is* the
+straggler — wall time per launch is the max over stripes — so load skew
+measured host-side from the plan equals the timing skew a profiler would
+see.  The report surfaces in ``EngineStats`` after every distributed
+call.  Both pieces are host-side and fully unit-testable without
+hardware.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import statistics
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
-__all__ = ["StragglerMonitor"]
+__all__ = ["StragglerMonitor", "StripeSkewReport", "stripe_skew_report"]
 
 
 class StragglerMonitor:
@@ -65,3 +74,43 @@ class StragglerMonitor:
     @property
     def median(self) -> float:
         return statistics.median(self.times) if self.times else float("nan")
+
+
+@dataclasses.dataclass(frozen=True)
+class StripeSkewReport:
+    """Wedge-load imbalance across the §III-E edge stripes of one workload.
+
+    ``skew`` is ``max_load / mean_load`` (1.0 = perfectly balanced; the
+    launch wall time tracks the max, so skew is the slowdown factor vs a
+    perfect partition).  ``straggler_stripe`` is the index of the stripe
+    flagged by the same median+MAD rule :class:`StragglerMonitor` applies
+    to step timings — ``None`` when no stripe is anomalous (round-robin
+    striping keeps skew near 1 on most graphs).
+    """
+
+    n_stripes: int
+    loads: tuple[int, ...]        # wedge slots per stripe
+    mean_load: float
+    max_load: int
+    skew: float
+    straggler_stripe: int | None
+
+
+def stripe_skew_report(
+    loads: Sequence[int], threshold: float = 3.0
+) -> StripeSkewReport:
+    """Build a :class:`StripeSkewReport` from per-stripe wedge loads."""
+    loads = tuple(int(x) for x in loads)
+    n = len(loads)
+    if n == 0 or max(loads) == 0:
+        return StripeSkewReport(n, loads, 0.0, 0, 1.0, None)
+    mean = sum(loads) / n
+    mx = max(loads)
+    skew = mx / mean if mean > 0 else 1.0
+    straggler = None
+    if n >= 2:
+        med = statistics.median(loads)
+        mad = statistics.median(abs(x - med) for x in loads) or (0.05 * med)
+        if mx > med + threshold * 1.4826 * mad and mx > 1.2 * med:
+            straggler = loads.index(mx)
+    return StripeSkewReport(n, loads, mean, mx, skew, straggler)

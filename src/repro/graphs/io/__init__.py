@@ -15,7 +15,9 @@ file to the engine:
     back into the canonical edge array.
 ``cache``
     The versioned ``.tricsr`` binary CSR cache — parse/canonicalize once,
-    memory-map on every later load.
+    memory-map on every later load — plus per-stripe slab views
+    (``.tricsr.stripe{k}of{N}``) so each device of a §III-E mesh memmaps
+    only its node-range slab.
 ``registry``
     Named datasets (the paper's Table I graphs) with URLs, checksums and
     deterministic Kronecker/R-MAT fallbacks of matching scale for offline
@@ -32,10 +34,18 @@ from .parsers import (
 from .external import canonicalize_edges_external, ExternalSortStats
 from .cache import (
     CSRGraph,
+    CSRStripe,
     save_tricsr,
     load_tricsr,
+    plan_csr_stripes,
+    stripe_path,
+    save_tricsr_stripes,
+    load_tricsr_stripe,
+    load_tricsr_stripes,
+    assemble_stripes,
     TRICSR_MAGIC,
     TRICSR_VERSION,
+    TRISLB_MAGIC,
     CacheError,
 )
 from .ingest import ingest, cache_path_for, IngestStats
@@ -54,10 +64,18 @@ __all__ = [
     "canonicalize_edges_external",
     "ExternalSortStats",
     "CSRGraph",
+    "CSRStripe",
     "save_tricsr",
     "load_tricsr",
+    "plan_csr_stripes",
+    "stripe_path",
+    "save_tricsr_stripes",
+    "load_tricsr_stripe",
+    "load_tricsr_stripes",
+    "assemble_stripes",
     "TRICSR_MAGIC",
     "TRICSR_VERSION",
+    "TRISLB_MAGIC",
     "CacheError",
     "ingest",
     "cache_path_for",

@@ -49,10 +49,11 @@ def run_service(
     queries_per_batch: int = 4,
     max_wedge_chunk: int | None = None,
     method: str = "auto",
+    mesh=None,
 ):
     """Apply ``stream`` batches interleaved with queries; return a report."""
     counter = IncrementalTriangleCounter(
-        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk, method=method
+        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk, method=method, mesh=mesh
     )
     update_lat, query_lat = [], []
     n_batches = n_inserted = n_deleted = 0
@@ -108,11 +109,13 @@ def main() -> None:
                     help="wedge-buffer budget per launch, applied to every "
                          "update batch's probe workload")
     ap.add_argument("--method", default="auto",
-                    choices=["auto", "wedge_bsearch", "panel", "pallas"],
+                    choices=["auto", "wedge_bsearch", "panel", "pallas",
+                             "distributed"],
                     help="kernel backend for the bootstrap count and the "
                          "update probes (auto keeps probes on the wedge "
                          "schedule; panel/pallas route them through the "
-                         "panel/Pallas backend)")
+                         "panel/Pallas backend; distributed stripes them "
+                         "§III-E-style over a mesh of all local devices)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the final from-scratch oracle recount")
     args = ap.parse_args()
@@ -120,6 +123,14 @@ def main() -> None:
         ap.error("--window must be a positive number of live edges")
     if args.batch_size < 1:
         ap.error("--batch-size must be positive")
+
+    mesh = None
+    if args.method == "distributed":
+        import jax
+
+        devs = jax.devices()
+        mesh = jax.sharding.Mesh(np.array(devs), ("edges",))
+        print(f"mesh: {len(devs)} device(s) striped on axis 'edges'")
 
     graph, info = resolve_graph(args)
     # streams consume edge arrays; a cached CSR seed materializes one
@@ -147,6 +158,7 @@ def main() -> None:
         queries_per_batch=args.queries_per_batch,
         max_wedge_chunk=args.max_wedge_chunk,
         method=args.method,
+        mesh=mesh,
     )
     if counter.last_update_stats is not None:
         print(f"probe backend: {counter.last_update_stats.probe_method}")
@@ -161,7 +173,9 @@ def main() -> None:
     print(f"live graph: {counter.n_edges} edges, T = {counter.count}")
 
     if not args.no_verify:
-        tc = TriangleCounter(method=args.method, max_wedge_chunk=args.max_wedge_chunk)
+        tc = TriangleCounter(
+            method=args.method, max_wedge_chunk=args.max_wedge_chunk, mesh=mesh
+        )
         expect = tc.count(counter.current_edges(), n_nodes=counter.n_nodes)
         if counter.count != expect:
             raise SystemExit(

@@ -265,39 +265,78 @@ def test_per_node_and_support_bit_identical_across_backends(family_graphs):
             assert tc.last_stats.method == method
 
 
-def test_distributed_fallback_is_loud(family_graphs):
-    """distributed has no per_node/support kernel: the engine must run the
-    wedge backend, record fallback_reason, and warn once."""
-    import warnings
-
+def test_distributed_runs_every_workload(family_graphs):
+    """distributed now carries per_node/support kernels: on a 1×1 mesh every
+    workload executes the striped schedule bit-identically — no fallback."""
     import jax
-
-    from repro.core.engine import _warned_fallbacks
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     e = family_graphs["kron10"]
     base = TriangleCounter(method="wedge_bsearch")
+    expect_count = base.count(e)
     pn0 = base.per_node(e)
-    _warned_fallbacks.clear()
+    sup0 = base.edge_support(e)
     tc = TriangleCounter(method="distributed", mesh=mesh)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        pn = tc.per_node(e)
-    assert [w for w in caught if issubclass(w.category, RuntimeWarning)]
-    np.testing.assert_array_equal(pn, pn0)
-    st = tc.last_stats
-    assert st.method == "wedge_bsearch"
-    assert st.resolved_method == "distributed"
-    assert st.fallback_reason and "per_node" in st.fallback_reason
-    # the warning is one-time per (method, kind) pair
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        tc.per_node(e)
-    assert not [w for w in caught if issubclass(w.category, RuntimeWarning)]
-    # count still executes the distributed schedule with no fallback
-    tc.count(e)
+    assert tc.count(e) == expect_count
     assert tc.last_stats.method == "distributed"
     assert tc.last_stats.fallback_reason is None
+    np.testing.assert_array_equal(tc.per_node(e), pn0)
+    st = tc.last_stats
+    assert st.method == "distributed"
+    assert st.resolved_method == "distributed"
+    assert st.fallback_reason is None
+    assert st.n_stripes == 1
+    np.testing.assert_array_equal(tc.edge_support(e), sup0)
+    assert tc.last_stats.method == "distributed"
+    assert tc.last_stats.fallback_reason is None
+
+
+def test_capability_fallback_is_loud_and_not_sticky(family_graphs):
+    """A backend lacking a kernel falls back loudly — and the recorded
+    fallback_reason must not leak into the next (clean) call on the same
+    reused counter."""
+    import warnings
+
+    from repro.core.engine import (
+        WedgeBackend,
+        register_backend,
+        _BACKEND_FACTORIES,
+        _warned_fallbacks,
+    )
+
+    class CountOnly(WedgeBackend):
+        name = "count_only"
+        capabilities = frozenset({"count"})
+
+    e = family_graphs["kron10"]
+    base = TriangleCounter(method="wedge_bsearch")
+    pn0 = base.per_node(e)
+    expect_count = base.count(e)
+    register_backend("count_only", lambda **_: CountOnly())
+    try:
+        _warned_fallbacks.clear()
+        tc = TriangleCounter(method="count_only")
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            pn = tc.per_node(e)
+        assert [w for w in caught if issubclass(w.category, RuntimeWarning)]
+        np.testing.assert_array_equal(pn, pn0)
+        st = tc.last_stats
+        assert st.method == "wedge_bsearch"
+        assert st.resolved_method == "count_only"
+        assert st.fallback_reason and "per_node" in st.fallback_reason
+        # the warning is one-time per (method, kind) pair
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            tc.per_node(e)
+        assert not [w for w in caught if issubclass(w.category, RuntimeWarning)]
+        # regression: stats are per-invocation — a subsequent clean call on
+        # the same counter must not report the stale fallback_reason
+        assert tc.count(e) == expect_count
+        assert tc.last_stats.method == "count_only"
+        assert tc.last_stats.fallback_reason is None
+    finally:
+        del _BACKEND_FACTORIES["count_only"]
 
 
 def test_backend_registry_roundtrip():
@@ -324,7 +363,7 @@ def test_backend_registry_roundtrip():
     with pytest.raises(ValueError):
         resolve_backend("wedge_bsearch", "frobnicate")
     assert set(CAPABILITIES) == {"count", "per_node", "support"}
-    register_backend("test_custom", lambda widths, tuner: WedgeBackend())
+    register_backend("test_custom", lambda **_: WedgeBackend())
     try:
         assert make_backend("test_custom").name == "wedge_bsearch"
     finally:
