@@ -199,7 +199,7 @@ def profile_from_counts(tri: np.ndarray, deg: np.ndarray) -> dict:
     out = {"bins": lo.tolist(), "n_nodes": [], "mean_clustering": [], "mean_triangles": []}
     for b in range(n_bins):
         m = keep & (which == b)
-        cnt = int(m.sum())
+        cnt = int(m.sum(dtype=np.int64))
         out["n_nodes"].append(cnt)
         out["mean_clustering"].append(float(cc[m].mean()) if cnt else 0.0)
         out["mean_triangles"].append(float(tri[m].mean()) if cnt else 0.0)
@@ -319,7 +319,7 @@ def graph_report(
     timings["support"] = time.perf_counter() - t0
     su, sv, ss = sup.top_k(top_k)
     report["support"] = {
-        "sum": int(sup.support.sum()),
+        "sum": int(sup.support.sum(dtype=np.int64)),
         "max": int(sup.support.max()) if sup.n_edges else 0,
         "n_chunks": sup.n_chunks,
         "method": sup.method,

@@ -129,7 +129,7 @@ class EdgeSupport:
 
     def total_triangles(self) -> int:
         """Global triangle count implied by the support (Σ support / 3)."""
-        return int(self.support.sum()) // 3
+        return int(self.support.sum(dtype=np.int64)) // 3
 
     def top_k(self, k: int = 10):
         """The ``k`` most triangle-dense edges as ``(u, v, support)``."""

@@ -74,7 +74,8 @@ class TrussDecomposition:
         if self.n_edges == 0:
             return {}
         return {
-            k: int((self.trussness >= k).sum()) for k in range(2, self.max_k + 1)
+            k: int((self.trussness >= k).sum(dtype=np.int64))
+            for k in range(2, self.max_k + 1)
         }
 
     def edges_at_least(self, k: int) -> np.ndarray:

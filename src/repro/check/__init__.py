@@ -1,0 +1,25 @@
+"""repro.check — trilint static passes + runtime audit layer.
+
+Static analysis (stdlib-only, runs without jax/numpy):
+
+    python -m repro.check [--json] [--select overflow,recompile,...]
+
+Passes: ``overflow`` (O1-O3), ``recompile`` (R1), ``collectives`` (C1-C3),
+``backend_protocol`` (B1-B4), ``stats_lifecycle`` (S1) — each documented in
+its module and in the README "Invariants" section.  Suppress inline with
+``# trilint: ok[rule]`` or via the repo-root ``trilint.allow`` file.
+
+Runtime audit (needs numpy/jax): ``repro.check.runtime`` provides the
+``REPRO_CHECK=1`` partial-headroom sanitizer hooked into
+``engine.run_workload`` and the ``CompileAuditor`` trace counter.
+"""
+
+from .base import (  # noqa: F401
+    Finding,
+    ModuleInfo,
+    PASSES,
+    load_passes,
+    run_checks,
+)
+
+__all__ = ["Finding", "ModuleInfo", "PASSES", "load_passes", "run_checks"]

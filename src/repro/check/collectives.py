@@ -1,0 +1,132 @@
+"""trilint pass: collective hygiene under the striped mesh.
+
+The distributed path (SIII-E striping) relies on three conventions:
+collectives name a mesh axis that is actually declared; striped-kernel
+outputs stay *replicated* (reconstructed from gathered row indices, never
+from ``axis_index`` — the PR 6 parity bug); and every ``shard_map`` states
+its specs explicitly so sharding is visible at the call site.
+
+* ``C1-axis-undeclared`` — a string-literal axis name passed to
+  ``psum``/``all_gather``/... that does not appear in any ``Mesh``/
+  ``PartitionSpec`` declaration (or ``*AXIS*`` constant) in the module.
+* ``C2-axis-index-in-core`` — ``axis_index`` used in a ``core/`` counting
+  module; striped outputs must be replicated, not rank-dependent.
+* ``C3-shardmap-specs`` — ``shard_map`` call missing explicit
+  ``in_specs``/``out_specs``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import (
+    Finding,
+    ModuleInfo,
+    call_name,
+    has_keyword,
+    register_pass,
+)
+
+_COLLECTIVES = {
+    "psum", "pmean", "pmax", "pmin", "all_gather", "ppermute",
+    "all_to_all", "axis_index", "pbroadcast",
+}
+
+# Calls whose string-constant arguments declare axis names.
+_DECLARING_CALLS = {"Mesh", "make_mesh", "P", "PartitionSpec", "NamedSharding"}
+
+
+def _declared_axes(tree: ast.AST) -> "set[str]":
+    axes: "set[str]" = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = call_name(node).rsplit(".", 1)[-1]
+            if name in _DECLARING_CALLS:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                        axes.add(sub.value)
+        elif isinstance(node, ast.Assign):
+            # module constants like STRIPE_AXIS = "stripe"
+            for tgt in node.targets:
+                if (
+                    isinstance(tgt, ast.Name)
+                    and "AXIS" in tgt.id.upper()
+                    and isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, str)
+                ):
+                    axes.add(node.value.value)
+    return axes
+
+
+def _axis_literals(call: ast.Call) -> "list[str]":
+    """String literals passed as axis name(s) to a collective call."""
+    out = []
+    cands: "list[ast.AST]" = []
+    # positional: psum(x, "axis") / all_gather(x, "axis", ...)
+    if len(call.args) >= 2:
+        cands.append(call.args[1])
+    if call_name(call).rsplit(".", 1)[-1] == "axis_index" and call.args:
+        cands.append(call.args[0])
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            cands.append(kw.value)
+    for c in cands:
+        if isinstance(c, ast.Constant) and isinstance(c.value, str):
+            out.append(c.value)
+        elif isinstance(c, (ast.Tuple, ast.List)):
+            for el in c.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.append(el.value)
+    return out
+
+
+@register_pass("collectives")
+def check_collectives(mod: ModuleInfo) -> "list[Finding]":
+    findings: "list[Finding]" = []
+    tree = mod.tree
+    declared = _declared_axes(tree)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        short = name.rsplit(".", 1)[-1]
+
+        if short in _COLLECTIVES:
+            for axis in _axis_literals(node):
+                if axis not in declared:
+                    findings.append(
+                        mod.finding(
+                            "collectives",
+                            "C1-axis-undeclared",
+                            node,
+                            f"collective `{short}` names axis '{axis}' but no "
+                            "Mesh/PartitionSpec/*AXIS* declaration in this module "
+                            "declares it",
+                        )
+                    )
+
+        if short == "axis_index" and mod.rel.startswith("core/"):
+            findings.append(
+                mod.finding(
+                    "collectives",
+                    "C2-axis-index-in-core",
+                    node,
+                    "axis_index in a core counting module: striped kernel outputs "
+                    "must stay replicated (reconstruct positions from gathered row "
+                    "indices instead)",
+                )
+            )
+
+        if short == "shard_map":
+            if not (has_keyword(node, "in_specs") and has_keyword(node, "out_specs")):
+                findings.append(
+                    mod.finding(
+                        "collectives",
+                        "C3-shardmap-specs",
+                        node,
+                        "shard_map without explicit in_specs/out_specs; sharding "
+                        "must be visible at the call site",
+                    )
+                )
+    return findings

@@ -1,0 +1,238 @@
+"""trilint pass: overflow discipline on counting paths.
+
+The engine's contract (README "Invariants") is: device kernels accumulate in
+int32 (fast on GPU, enough headroom per bounded chunk), and every host-side
+fold widens explicitly to int64/uint64 before totals are formed — the
+paper's headline graph has 3.8B triangles, ~2x past int32.  Three rules:
+
+* ``O1-sum-dtype`` — ``jnp.sum``/``np.sum`` (and ``.sum()`` method calls
+  inside jit-compiled functions) without an explicit ``dtype=`` on a
+  counting path.  ``jnp.sum`` of int32 stays int32; silent.
+* ``O2-host-fold`` — ``int(... .sum() ...)`` where the reduction neither
+  passes ``dtype=`` nor widens via ``.astype(int64/uint64)`` first.  On a
+  jnp array this folds through an int32 accumulator before ``int()`` sees
+  it.
+* ``O3-narrow`` — ``.astype(int32)`` applied to index-scale values produced
+  by ``nonzero``/``searchsorted``/``cumsum``/``argsort`` with no enclosing
+  bound guard (``ensure_fits_int32`` / ``can_narrow_int32`` /
+  ``validate_node_ids``).  Wraps silently at m >= 2^31.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import (
+    Finding,
+    ModuleInfo,
+    build_parent_map,
+    call_name,
+    dotted_name,
+    function_calls,
+    has_keyword,
+    register_pass,
+)
+
+# Modules on the triangle-counting data path, where integer reductions are
+# edge/wedge/triangle-scale and must be dtype-disciplined.  Float kernels
+# (flash_attention etc.) are out of scope for O1/O2; O3 applies repo-wide.
+COUNTING_PREFIXES = ("core/", "analytics/", "distributed/", "kernels/triangle_count/")
+
+# Qualified reduction callables covered by O1.
+_SUM_CALLS = {"jnp.sum", "np.sum", "numpy.sum", "jax.numpy.sum"}
+
+# Producers whose outputs are index/offset-scale (can exceed int32 once the
+# array they index has >= 2^31 entries).
+_INDEX_PRODUCERS = {"nonzero", "searchsorted", "cumsum", "argsort", "flatnonzero"}
+
+# Calling any of these in an enclosing scope counts as a loud bound check.
+_NARROW_GUARDS = {"ensure_fits_int32", "can_narrow_int32", "validate_node_ids"}
+
+_INT32_NAMES = {"np.int32", "jnp.int32", "numpy.int32", "jax.numpy.int32"}
+_WIDE_NAMES = {
+    "np.int64", "jnp.int64", "numpy.int64",
+    "np.uint64", "jnp.uint64", "numpy.uint64",
+}
+
+_JIT_DECORATORS = {"jit", "jax.jit", "pl.pallas_call", "pallas_call"}
+
+
+def _on_counting_path(rel: str) -> bool:
+    return rel.startswith(COUNTING_PREFIXES)
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    for deco in getattr(fn, "decorator_list", []):
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        name = dotted_name(target)
+        if name in _JIT_DECORATORS:
+            return True
+        # functools.partial(jax.jit, ...) style
+        if isinstance(deco, ast.Call) and name.endswith("partial"):
+            for arg in deco.args:
+                if dotted_name(arg) in _JIT_DECORATORS:
+                    return True
+    return False
+
+
+def _widened(node: ast.AST) -> bool:
+    """True if the subtree already widens: dtype= kw or astype(int64/uint64)."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        if has_keyword(sub, "dtype"):
+            return True
+        if isinstance(sub.func, ast.Attribute) and sub.func.attr == "astype":
+            for arg in sub.args:
+                name = dotted_name(arg)
+                if name in _WIDE_NAMES:
+                    return True
+                if isinstance(arg, ast.Constant) and arg.value in ("int64", "uint64"):
+                    return True
+    return False
+
+
+def _contains_sum(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name in _SUM_CALLS:
+                return True
+            if isinstance(sub.func, ast.Attribute) and sub.func.attr == "sum":
+                return True
+    return False
+
+
+def _narrows_to_int32(call: ast.Call) -> bool:
+    if not (isinstance(call.func, ast.Attribute) and call.func.attr == "astype"):
+        return False
+    for arg in call.args:
+        if dotted_name(arg) in _INT32_NAMES:
+            return True
+        if isinstance(arg, ast.Constant) and arg.value == "int32":
+            return True
+    return False
+
+
+def _produces_index_scale(node: ast.AST, assigns: "dict[str, ast.AST]") -> bool:
+    """Does this subtree (with one level of Name substitution) come from an
+    index-scale producer?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name.rsplit(".", 1)[-1] in _INDEX_PRODUCERS:
+                return True
+    # One-level substitution: `idx = np.nonzero(...)[0]; ... idx.astype(int32)`
+    if isinstance(node, ast.Name) and node.id in assigns:
+        src = assigns[node.id]
+        for sub in ast.walk(src):
+            if isinstance(sub, ast.Call):
+                name = call_name(sub)
+                if name.rsplit(".", 1)[-1] in _INDEX_PRODUCERS:
+                    return True
+    return False
+
+
+def _collect_assigns(scope: ast.AST) -> "dict[str, ast.AST]":
+    """Map simple ``name = expr`` assignments in a scope (last one wins)."""
+    assigns: "dict[str, ast.AST]" = {}
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name):
+                assigns[tgt.id] = node.value
+    return assigns
+
+
+@register_pass("overflow")
+def check_overflow(mod: ModuleInfo) -> "list[Finding]":
+    findings: "list[Finding]" = []
+    tree = mod.tree
+    parents = build_parent_map(tree)
+    counting = _on_counting_path(mod.rel)
+
+    def fn_stack(node: ast.AST) -> "list[ast.AST]":
+        stack = []
+        cur = node
+        while cur in parents:
+            cur = parents[cur]
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.append(cur)
+        return stack
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+
+        # --- O1: dtype-less reductions ---------------------------------
+        if counting and not has_keyword(node, "dtype"):
+            name = call_name(node)
+            flagged = False
+            if name in _SUM_CALLS:
+                flagged = True
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sum"
+                and any(_is_jit_decorated(fn) for fn in fn_stack(node))
+            ):
+                # .sum() on a traced array keeps int32; require dtype= in jit.
+                flagged = True
+            if flagged:
+                # int()/float() wrapping is handled (more precisely) by O2;
+                # don't double-report the same reduction.
+                parent = parents.get(node)
+                while parent is not None and isinstance(parent, (ast.Subscript, ast.Attribute)):
+                    parent = parents.get(parent)
+                wrapped_by_int = (
+                    isinstance(parent, ast.Call)
+                    and dotted_name(parent.func) in ("int", "float")
+                )
+                if not wrapped_by_int and not _widened(node):
+                    findings.append(
+                        mod.finding(
+                            "overflow",
+                            "O1-sum-dtype",
+                            node,
+                            f"`{name or node.func.attr}` reduction without explicit dtype= on a "
+                            "counting path; jnp.sum of int32 accumulates in int32",
+                        )
+                    )
+
+        # --- O2: host folds through int() ------------------------------
+        if counting and dotted_name(node.func) == "int" and len(node.args) == 1:
+            arg = node.args[0]
+            if _contains_sum(arg) and not _widened(arg):
+                findings.append(
+                    mod.finding(
+                        "overflow",
+                        "O2-host-fold",
+                        node,
+                        "host fold `int(....sum())` without dtype=/astype widening; "
+                        "on a jnp array the accumulator is int32 before int() sees it",
+                    )
+                )
+
+        # --- O3: unguarded narrowing to int32 ---------------------------
+        if _narrows_to_int32(node):
+            stack = fn_stack(node)
+            guarded = any(_NARROW_GUARDS & function_calls(fn) for fn in stack)
+            if not stack:
+                # module level: look at the whole module for a guard call
+                guarded = bool(_NARROW_GUARDS & function_calls(tree))
+            if not guarded:
+                scope = stack[0] if stack else tree
+                assigns = _collect_assigns(scope)
+                operand = node.func.value
+                if _produces_index_scale(operand, assigns):
+                    findings.append(
+                        mod.finding(
+                            "overflow",
+                            "O3-narrow",
+                            node,
+                            "index-scale value narrowed with .astype(int32) and no "
+                            "ensure_fits_int32/can_narrow_int32 guard in scope; "
+                            "wraps silently at m >= 2^31",
+                        )
+                    )
+
+    return findings

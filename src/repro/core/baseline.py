@@ -81,7 +81,7 @@ def count_triangles_numpy(edges: np.ndarray) -> int:
             lo = np.where(go, mid + 1, lo)
             hi = np.where(stay, mid, hi)
         found = (lo < offsets[vv + 1]) & (col[np.minimum(lo, col.shape[0] - 1)] == ww)
-        count += int(found.sum())
+        count += int(found.sum(dtype=np.int64))
     return count
 
 

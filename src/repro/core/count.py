@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .preprocess import OrientedCSR, preprocess
+from repro.distributed.compression import ensure_fits_int32
 
 __all__ = [
     "WedgePlan",
@@ -76,7 +77,7 @@ def make_wedge_plan(csr: OrientedCSR, pad_to: int | None = None) -> WedgePlan:
     """Compute concrete wedge-buffer sizing from a (host-resident) CSR."""
     out_deg = np.asarray(csr.out_degree)
     src = np.asarray(csr.src)
-    total = int(out_deg[src].sum()) if src.size else 0
+    total = int(out_deg[src].sum(dtype=np.int64)) if src.size else 0
     max_deg = int(out_deg.max()) if out_deg.size else 0
     steps = max(1, math.ceil(math.log2(max_deg + 1))) if max_deg else 1
     if pad_to is not None:
@@ -258,6 +259,9 @@ def bucketize_edges(
     out_deg = np.asarray(csr.out_degree)
     src = np.asarray(csr.src)
     col = np.asarray(csr.col)
+    # bucket indices are stored int32: fail loudly at m >= 2^31 instead of
+    # letting .astype wrap them (satellite of the overflow-discipline pass)
+    ensure_fits_int32(src.shape[0], "directed edge count (panel bucket indices)")
     need = np.maximum(out_deg[src], out_deg[col])
     buckets: dict[int, np.ndarray] = {}
     lo = 0

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .count import _batched_contains, _batched_search, segmented_int32_sum
 from .preprocess import OrientedCSR, preprocess
+from repro.distributed.compression import ensure_fits_int32
 
 __all__ = [
     "stripe_edges",
@@ -561,6 +562,7 @@ def oriented_csr_from_slabs(slabs) -> OrientedCSR:
         col_parts.append(v[keep])
     src = np.concatenate(src_parts) if src_parts else np.zeros(0, np.int32)
     col = np.concatenate(col_parts) if col_parts else np.zeros(0, np.int32)
+    ensure_fits_int32(src.shape[0], "directed edge count (slab assembly offsets)")
     row = np.searchsorted(src, np.arange(n + 1, dtype=np.int64)).astype(np.int32)
     out_degree = (row[1:] - row[:-1]).astype(np.int32)
     return OrientedCSR(

@@ -103,6 +103,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import os
 import warnings
 from typing import Iterator, NamedTuple
 
@@ -120,6 +121,7 @@ from .count import (
     segmented_int32_sum,
 )
 from .preprocess import OrientedCSR, oriented_from_undirected_csr, preprocess
+from repro.distributed.compression import ensure_fits_int32
 
 __all__ = [
     "TriangleCounter",
@@ -196,7 +198,7 @@ def plan_edge_chunks(reps: np.ndarray, budget: int | None):
     m = reps.shape[0]
     if m == 0:
         return [(0, 0)], 1
-    total = int(reps.sum())
+    total = int(reps.sum(dtype=np.int64))
     max_fan = int(reps.max())
     if budget is None or budget >= total:
         return [(0, m)], max(total, 1)
@@ -591,7 +593,7 @@ class WedgeBackend(KernelBackend):
                     start, peak,
                 )
 
-        return WorkPlan(gen(), len(bounds), peak, int(reps.sum()))
+        return WorkPlan(gen(), len(bounds), peak, int(reps.sum(dtype=np.int64)))
 
     def count_chunk(self, adj, chunk):
         return chunk_count_kernel(
@@ -651,11 +653,12 @@ class PanelBackend(KernelBackend):
 
     def plan(self, work: Workload, budget: int | None, *, bucket_pow2: bool = False) -> WorkPlan:
         src, dst, deg = work.src_host, work.dst_host, work.deg_host
+        ensure_fits_int32(src.shape[0], "panel query edge count")
         valid = (src >= 0) & (dst >= 0)
         du = np.where(valid, deg[np.maximum(src, 0)], 0).astype(np.int64)
         dv = np.where(valid, deg[np.maximum(dst, 0)], 0).astype(np.int64)
         need = np.maximum(du, dv)
-        total_wedges = int(du.sum())
+        total_wedges = int(du.sum(dtype=np.int64))
 
         def take(arr, sl):
             return np.where(sl >= 0, arr[np.maximum(sl, 0)], -1).astype(np.int32)
@@ -832,7 +835,7 @@ class DistributedBackend(KernelBackend):
                 )
 
         return WorkPlan(
-            gen(), len(bounds), eff, int(reps.sum()),
+            gen(), len(bounds), eff, int(reps.sum(dtype=np.int64)),
             n_stripes=S, stripe_loads=stripe_loads,
         )
 
@@ -994,6 +997,20 @@ def resolve_backend(
     return make_backend("wedge_bsearch", widths=widths, tuner=tuner), "wedge_bsearch", reason
 
 
+def _sanitizer():
+    """The ``REPRO_CHECK=1`` runtime audit module, or None when disabled.
+
+    Checked per call (not cached) so tests can toggle the env var; the
+    import cost is one dict lookup after the first load.
+    """
+    flag = os.environ.get("REPRO_CHECK", "").strip().lower()
+    if flag in ("", "0", "false", "off", "no"):
+        return None
+    from repro.check import runtime as _rt
+
+    return _rt
+
+
 def run_workload(
     backend: KernelBackend,
     kind: str,
@@ -1017,23 +1034,32 @@ def run_workload(
         jnp.asarray(work.row_offsets), jnp.asarray(work.col),
         jnp.asarray(work.out_degree), work.n_steps,
     )
+    san = _sanitizer()
     if kind == "count":
         # collect device partials first, accumulate once: launches stay
         # async-dispatched instead of syncing host-side per chunk
         partials = [backend.count_chunk(adj, chunk) for chunk in plan.chunks]
+        if san is not None:
+            san.check_partials(partials, kind="count")
         return accumulate_partials(partials), plan
     if kind == "per_node":
         if n_out is None:
             n_out = adj.row_offsets.shape[0] - 1
         out = np.zeros((n_out,), np.int64)
-        for chunk in plan.chunks:
-            out += np.asarray(backend.per_node_chunk(adj, chunk, n_out), dtype=np.int64)
+        for i, chunk in enumerate(plan.chunks):
+            part = backend.per_node_chunk(adj, chunk, n_out)
+            if san is not None:
+                san.check_partial(part, kind="per_node", context=f"chunk {i}")
+            out += np.asarray(part, dtype=np.int64)
         return out, plan
     if kind == "support":
         m_out = int(work.src_host.shape[0])
         out = np.zeros((m_out,), np.int64)
-        for chunk in plan.chunks:
-            out += np.asarray(backend.support_chunk(adj, chunk, m_out), dtype=np.int64)
+        for i, chunk in enumerate(plan.chunks):
+            part = backend.support_chunk(adj, chunk, m_out)
+            if san is not None:
+                san.check_partial(part, kind="support", context=f"chunk {i}")
+            out += np.asarray(part, dtype=np.int64)
         return out, plan
     raise ValueError(f"unknown workload kind {kind!r}")
 

@@ -73,6 +73,7 @@ from .engine import (
     run_workload,
     _DeviceAdj,
 )
+from repro.distributed.compression import ensure_fits_int32
 from repro.graphs.formats import validate_node_ids
 
 __all__ = ["IncrementalTriangleCounter", "UpdateStats"]
@@ -237,6 +238,9 @@ class IncrementalTriangleCounter:
         Self loops, in-batch duplicates and already-present edges are
         ignored, so inserts are idempotent.
         """
+        # stats lifecycle: never let a failed update leave the previous
+        # batch's stats observable (trilint stats_lifecycle/S1)
+        self.last_update_stats = None
         und = self._normalize_batch(edges)
         und = und[~self._member(und)]
         if und.shape[0] == 0:
@@ -264,6 +268,7 @@ class IncrementalTriangleCounter:
         Edges not currently present (including never-inserted ones) are
         ignored, so deletes are idempotent.
         """
+        self.last_update_stats = None
         und = self._normalize_batch(edges)
         und = und[self._member(und)]
         if und.shape[0] == 0:
@@ -361,6 +366,7 @@ class IncrementalTriangleCounter:
         n = self._n
         if pu.shape[0] == 0 or adj.shape[0] == 0:
             return 0, np.zeros(n, np.int64), 0, 0
+        ensure_fits_int32(adj.shape[0], "probe adjacency size (row offsets)")
         src_k = (adj >> np.int64(32)).astype(np.int64)
         col = (adj & _MASK32).astype(np.int32)
         # node axis pads to a power of two: extra rows are empty, so the
@@ -388,7 +394,7 @@ class IncrementalTriangleCounter:
                 self._backend, "per_node", work,
                 budget=self.max_wedge_chunk, n_out=n_pad, bucket_pow2=True,
             )
-            total = int(per_node.sum())
+            total = int(per_node.sum(dtype=np.int64))
             assert total % 3 == 0, total
             return total // 3, per_node[:n], plan.n_chunks, plan.peak_buffer
         reps = deg[eu].astype(np.int64)
@@ -421,6 +427,6 @@ class IncrementalTriangleCounter:
             per_node += np.asarray(pn, dtype=np.int64)
         # every hit scatters +1 to exactly u, v and w, so the per-node
         # output carries the hit total — one kernel per chunk does both jobs
-        total = int(per_node.sum())
+        total = int(per_node.sum(dtype=np.int64))
         assert total % 3 == 0, total
         return total // 3, per_node[:n], len(bounds), eff

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.compression import ensure_fits_int32
+
 __all__ = [
     "OrientedCSR",
     "preprocess",
@@ -82,6 +84,8 @@ def preprocess(edges: jax.Array, n_nodes: int) -> OrientedCSR:
     m = edges.shape[0]
     if m % 2 != 0:
         raise ValueError("canonical edge array must have even length")
+    # static shape at trace time: the int32 CSR offsets below must hold m//2
+    ensure_fits_int32(m, "canonical edge count (CSR offsets)")
     u, v = edges[:, 0], edges[:, 1]
     deg = degrees(edges, n_nodes)
     # Forward orientation: low (degree, id) endpoint -> high endpoint.
@@ -113,6 +117,7 @@ def oriented_from_undirected_csr(row_offsets, col, n_nodes: int | None = None) -
     """
     row_offsets = np.asarray(row_offsets)
     col = np.asarray(col)
+    ensure_fits_int32(col.shape[0], "undirected CSR edge slots (oriented offsets)")
     if n_nodes is None:
         n_nodes = row_offsets.shape[0] - 1
     deg = np.diff(row_offsets).astype(np.int32)
@@ -155,6 +160,7 @@ def preprocess_host_offload(edges: np.ndarray, n_nodes: int | None = None) -> Or
     u, v = edges[:, 0], edges[:, 1]
     du, dv = deg[u], deg[v]
     keep = (du < dv) | ((du == dv) & (u < v))
+    ensure_fits_int32(edges.shape[0], "canonical edge count (host-offload offsets)")
     directed = edges[keep].astype(np.int32)  # m/2 rows cross the PCIe link
 
     @functools.partial(jax.jit, static_argnames=("n",))

@@ -7,6 +7,7 @@ from .compression import (
     zigzag_encode,
     zigzag_decode,
     can_narrow_int32,
+    ensure_fits_int32,
     compressed_all_gather_int32,
 )
 from .straggler import StragglerMonitor, StripeSkewReport, stripe_skew_report
@@ -22,6 +23,7 @@ __all__ = [
     "zigzag_encode",
     "zigzag_decode",
     "can_narrow_int32",
+    "ensure_fits_int32",
     "compressed_all_gather_int32",
     "StragglerMonitor",
     "StripeSkewReport",

@@ -1,0 +1,51 @@
+"""trilint fixture: deliberate backend-protocol violations (B1/B3/B2).
+
+Parsed, never imported.  Self-contained protocol root so the pass's
+in-module chain resolution has something to walk.
+"""
+
+
+def register_backend(name, factory):
+    pass
+
+
+class KernelBackend:
+    capabilities: frozenset = frozenset()
+
+    def plan(self, work, budget, *, bucket_pow2=False):
+        raise NotImplementedError
+
+    def count_chunk(self, adj, chunk):
+        raise NotImplementedError
+
+    def per_node_chunk(self, adj, chunk, n_out):
+        raise NotImplementedError
+
+    def support_chunk(self, adj, chunk, m_out):
+        raise NotImplementedError
+
+
+class OverpromisingBackend(KernelBackend):
+    # B1: declares per_node but never implements per_node_chunk — the
+    # PR 5 silent-fallback bug class.
+    # B3: implements support_chunk but does not declare "support".
+    capabilities = frozenset({"count", "per_node"})
+
+    def plan(self, work, budget, *, bucket_pow2=False):
+        return None
+
+    def count_chunk(self, adj, chunk):
+        return 0
+
+    def support_chunk(self, adj, chunk, m_out):
+        return 0
+
+
+class UndeclaredBackend:
+    # B2: registered with no capabilities table at all (and B4: no plan).
+    def count_chunk(self, adj, chunk):
+        return 0
+
+
+register_backend("overpromising", lambda **kw: OverpromisingBackend(**kw))
+register_backend("undeclared", UndeclaredBackend)

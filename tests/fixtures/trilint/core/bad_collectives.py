@@ -1,0 +1,28 @@
+"""trilint fixture: deliberate collective-hygiene violations (C1/C2/C3).
+
+Parsed, never imported.
+"""
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+import numpy as np
+
+MESH = Mesh(np.array(jax.devices()), axis_names=("stripe",))
+
+
+def merge_partials(x):
+    # C1: axis "shard" is not declared by any Mesh/PartitionSpec here.
+    return jax.lax.psum(x, "shard")
+
+
+def rank_offset(x):
+    # C2: axis_index in a core/ module — striped outputs must be
+    # replicated, not rank-dependent.
+    return x + jax.lax.axis_index("stripe")
+
+
+def launch(fn):
+    # C3: shard_map without explicit in_specs/out_specs.
+    return shard_map(fn, mesh=MESH)

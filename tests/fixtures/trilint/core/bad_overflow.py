@@ -1,0 +1,25 @@
+"""trilint fixture: deliberate overflow-discipline violations (O1/O2/O3).
+
+Never imported — parsed from disk by tests/test_check.py to prove the
+`overflow` pass fires.  Lives under a fake `core/` directory so the
+counting-path prefix rules apply.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_chunk_total(partials):
+    # O1: jnp.sum without dtype= on a counting path (int32 stays int32).
+    return jnp.sum(partials)
+
+
+def host_fold_total(per_node):
+    # O2: host fold through int() with no widening before the reduction.
+    return int(per_node.sum())
+
+
+def bucket_indices(mask):
+    # O3: index-scale narrowing (nonzero output) with no bound guard.
+    idx = np.nonzero(mask)[0]
+    return idx.astype(np.int32)

@@ -1,0 +1,20 @@
+"""trilint fixture: deliberate recompile hazard (R1).
+
+A shape-derived value reaches a jit entry point with no pow2 bucket
+helper in the enclosing function — every distinct edge count mints a new
+trace.  Parsed, never imported.
+"""
+
+import jax.numpy as jnp
+
+from repro.core.engine import chunk_count_kernel
+
+
+def count_exact_shape(src, dst, row, col, deg):
+    # R1: wedge_budget tracks the raw data size; the trace cache grows
+    # without bound as the graph churns.
+    budget = src.shape[0] * 4
+    return chunk_count_kernel(
+        jnp.asarray(src), jnp.asarray(dst), row, col, deg,
+        wedge_budget=budget, n_steps=8,
+    )

@@ -1,0 +1,27 @@
+"""trilint fixture: deliberate stats-lifecycle violation (S1).
+
+Parsed, never imported.  `query` reaches the `last_stats` writer through a
+private helper but never clears it on entry — the PR 6 stale
+`fallback_reason` bug class.
+"""
+
+
+class LeakyEngine:
+    def __init__(self):
+        self.last_stats = None
+
+    def _record(self, stats):
+        self.last_stats = stats
+
+    def _run(self, work):
+        self._record({"work": work})
+        return 0
+
+    def query(self, work):
+        # S1: no `self.last_stats = None` before the private writer chain.
+        return self._run(work)
+
+    def count(self, work):
+        # compliant entry point: clears before running.
+        self.last_stats = None
+        return self._run(work)

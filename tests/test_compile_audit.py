@@ -1,0 +1,76 @@
+"""Compile-count regression tests: the O(log m) bucketing guarantee.
+
+PR 4/5 promised in prose that pow2 bucketing keeps the trace-cache
+population logarithmic across truss peel rounds and incremental probe
+sessions; these tests assert it with `CompileAuditor` against the real jit
+caches, so a planner change that leaks raw shapes to a kernel fails here
+instead of as a silent recompile storm.
+"""
+
+import numpy as np
+import pytest
+
+from repro.check.runtime import CompileAuditor, RuntimeCheckError
+
+
+def test_truss_kron10_traces_o_log_m():
+    from repro.analytics import k_truss_decomposition
+    from repro.graphs import kronecker_rmat
+
+    e = kronecker_rmat(10, edge_factor=8, seed=5)
+    with CompileAuditor() as aud:
+        dec = k_truss_decomposition(e, max_wedge_chunk=1 << 14)
+    # every peel round shrinks the live subgraph; bucketing must cap the
+    # distinct shapes each kernel sees at ~log2(m) (empirically 16 at
+    # m=6081, vs one-trace-per-round without bucketing)
+    bound = aud.assert_log_bound(dec.n_edges, factor=2.0, slack=4)
+    assert aud.total_new_traces > 0, "auditor observed no tracing at all"
+    assert bound >= max(aud.new_traces.values())
+
+
+@pytest.mark.slow
+def test_incremental_session_traces_o_log_m():
+    from repro.core.incremental import IncrementalTriangleCounter
+    from repro.graphs import kronecker_rmat
+
+    e = kronecker_rmat(10, edge_factor=8, seed=5)
+    half = len(e) // 2
+    tc = IncrementalTriangleCounter(e[:half], max_wedge_chunk=4096)
+    with CompileAuditor() as aud:
+        for i in range(6):
+            lo = half + i * 200
+            tc.insert(e[lo : lo + 200])
+            tc.delete(e[lo : lo + 60])
+    m = tc.current_edges().shape[0]
+    aud.assert_log_bound(m, factor=2.0, slack=4)
+
+
+def test_auditor_flags_unbucketed_shapes():
+    """A kernel fed raw (unbucketed) shapes must blow the log bound."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def toy_kernel(x):
+        return x.sum(dtype=jnp.int32)
+
+    with CompileAuditor(extra_jitted={"toy_kernel": toy_kernel}) as aud:
+        for n in range(1, 40):  # 39 distinct shapes, m=64 -> bound 16
+            toy_kernel(jnp.zeros((n,), jnp.int32))
+    with pytest.raises(RuntimeCheckError, match="compile-count bound"):
+        aud.assert_log_bound(64, factor=2.0, slack=4)
+
+
+def test_auditor_counts_are_deltas():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def toy(x):
+        return x + 1
+
+    toy(jnp.zeros(3))  # traced before the block: must not be counted
+    with CompileAuditor(extra_jitted={"toy": toy}) as aud:
+        toy(jnp.zeros(3))  # cache hit
+        toy(jnp.zeros(4))  # one new trace
+    assert aud.new_traces["toy"] == 1

@@ -3,6 +3,8 @@ import pytest
 
 from conftest import run_multidevice
 
+pytestmark = pytest.mark.distributed
+
 
 @pytest.mark.slow
 def test_distributed_count_matches_single():

@@ -22,6 +22,8 @@ import pytest
 
 from conftest import run_multidevice
 
+pytestmark = pytest.mark.distributed
+
 # ---------------------------------------------------------------------------
 # subprocess preamble shared by the mesh tests
 # ---------------------------------------------------------------------------
