@@ -1,6 +1,7 @@
 """Benchmark harness utilities. CSV contract: name,us_per_call,derived."""
 from __future__ import annotations
 
+import os
 import time
 
 
@@ -15,6 +16,15 @@ def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
     return times[len(times) // 2]
+
+
+def quick() -> bool:
+    """True under ``--quick`` (CI smoke sizing — suites shrink inputs).
+
+    Communicated via env var so suite modules stay plain ``run()``
+    functions; ``benchmarks.run`` sets it before dispatching.
+    """
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
 
 
 def emit(rows):

@@ -13,18 +13,20 @@ from __future__ import annotations
 from repro.core import TriangleCounter
 from repro.graphs import kronecker_rmat
 
-from .common import timeit
+from .common import quick, timeit
 
 FRACTIONS = (1.0, 0.25, 0.0625, 0.015625)
+QUICK_FRACTIONS = (1.0, 0.0625)
 
 
 def run():
-    edges = kronecker_rmat(12, seed=0)
+    scale, fractions = (10, QUICK_FRACTIONS) if quick() else (12, FRACTIONS)
+    edges = kronecker_rmat(scale, seed=0)
     probe = TriangleCounter(method="wedge_bsearch")
     expect = probe.count(edges)
     total = probe.last_stats.total_wedges
     rows = []
-    for frac in FRACTIONS:
+    for frac in fractions:
         budget = None if frac == 1.0 else max(int(total * frac), 1)
         engine = TriangleCounter(method="wedge_bsearch", max_wedge_chunk=budget)
         t = engine.count(edges)

@@ -26,19 +26,21 @@ from repro.graphs.io import (
 )
 from repro.graphs.io.ingest import csr_from_edge_array
 
-from .common import timeit
+from .common import quick, timeit
 
 SCALE = 13
+QUICK_SCALE = 10
 
 
 def run():
     rows = []
-    edges = kronecker_rmat(SCALE, edge_factor=16, seed=0)
+    scale = QUICK_SCALE if quick() else SCALE
+    edges = kronecker_rmat(scale, edge_factor=16, seed=0)
     one_dir = edges[edges[:, 0] < edges[:, 1]]
     raw_edges = one_dir.shape[0]
 
     with tempfile.TemporaryDirectory(prefix="bench-ingest-") as tmp:
-        src = os.path.join(tmp, f"kron{SCALE}.txt")
+        src = os.path.join(tmp, f"kron{scale}.txt")
         np.savetxt(src, one_dir, fmt="%d", delimiter="\t")
 
         # stage 1: parse only (drain the chunk stream), per budget

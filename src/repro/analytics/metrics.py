@@ -21,6 +21,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine import TriangleCounter, degree_histogram, prepare_oriented
 
 from .support import edge_support
@@ -265,8 +266,9 @@ def graph_report(
     JSON-ready dict (plain ints/floats/lists) with per-stage timings.
     """
     t0 = time.perf_counter()
-    deg, n_from_input = degree_histogram(graph, n_nodes)
-    csr = prepare_oriented(graph, n_nodes)
+    with obs.span("report.preprocess", cat="analytics"):
+        deg, n_from_input = degree_histogram(graph, n_nodes)
+        csr = prepare_oriented(graph, n_nodes)
     prep_s = time.perf_counter() - t0
     tc = TriangleCounter(method=method, max_wedge_chunk=max_wedge_chunk)
     report: dict = {
@@ -277,7 +279,8 @@ def graph_report(
     timings = {"preprocess": prep_s}
 
     t0 = time.perf_counter()
-    triangles = tc.count(csr if csr is not None else np.zeros((0, 2), np.int32))
+    with obs.span("report.count", cat="analytics"):
+        triangles = tc.count(csr if csr is not None else np.zeros((0, 2), np.int32))
     timings["count"] = time.perf_counter() - t0
     es = tc.last_stats
     report["triangles"] = triangles
@@ -290,15 +293,17 @@ def graph_report(
         "wedge_budget": es.wedge_budget,
         "total_wedges": es.total_wedges,
         "fallback_reason": es.fallback_reason,
+        "timings": es.timings,
     }
 
     t0 = time.perf_counter()
-    tri = (
-        tc.per_node(csr)
-        if csr is not None
-        else np.zeros((report["n_nodes"],), np.int64)
-    )
-    cc = clustering_from_counts(tri, deg) if deg.size else np.zeros((0,))
+    with obs.span("report.clustering", cat="analytics"):
+        tri = (
+            tc.per_node(csr)
+            if csr is not None
+            else np.zeros((report["n_nodes"],), np.int64)
+        )
+        cc = clustering_from_counts(tri, deg) if deg.size else np.zeros((0,))
     timings["clustering"] = time.perf_counter() - t0
     # one per-node pass feeds average, profile and top-k alike
     order = np.argsort(-tri, kind="stable")[: min(top_k, tri.shape[0])]
@@ -311,11 +316,12 @@ def graph_report(
     }
 
     t0 = time.perf_counter()
-    sup = edge_support(
-        csr if csr is not None else np.zeros((0, 2), np.int32),
-        method=method,
-        max_wedge_chunk=max_wedge_chunk,
-    )
+    with obs.span("report.support", cat="analytics"):
+        sup = edge_support(
+            csr if csr is not None else np.zeros((0, 2), np.int32),
+            method=method,
+            max_wedge_chunk=max_wedge_chunk,
+        )
     timings["support"] = time.perf_counter() - t0
     su, sv, ss = sup.top_k(top_k)
     report["support"] = {
@@ -331,11 +337,12 @@ def graph_report(
 
     if include_truss:
         t0 = time.perf_counter()
-        dec = k_truss_decomposition(
-            csr if csr is not None else np.zeros((0, 2), np.int32),
-            max_wedge_chunk=max_wedge_chunk,
-            method=method,
-        )
+        with obs.span("report.truss", cat="analytics"):
+            dec = k_truss_decomposition(
+                csr if csr is not None else np.zeros((0, 2), np.int32),
+                max_wedge_chunk=max_wedge_chunk,
+                method=method,
+            )
         timings["truss"] = time.perf_counter() - t0
         report["truss"] = {
             "max_k": dec.max_k,

@@ -35,6 +35,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine import next_pow2, prepare_oriented, resolve_method, search_steps
 
 from .support import support_on_arrays
@@ -133,9 +134,11 @@ def k_truss_decomposition(
     method = resolve_method(method, csr.out_degree, mesh=mesh)
     trussness = np.full(m, 2, np.int32)
     idx = np.arange(m)
-    sup, launches, executed = _alive_support(
-        src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
-    )
+    with obs.span("truss.round", cat="analytics",
+                  args={"round": 1, "k": 3, "alive": int(idx.size)}):
+        sup, launches, executed = _alive_support(
+            src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
+        )
     rounds = 1
     k = 3
     while idx.size:
@@ -148,9 +151,12 @@ def k_truss_decomposition(
             if idx.size == 0:
                 break
             # removal may cascade: recompute support on the shrunk graph
-            sup, n_chunks, executed = _alive_support(
-                src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
-            )
+            with obs.span("truss.round", cat="analytics",
+                          args={"round": rounds + 1, "k": k,
+                                "alive": int(idx.size)}):
+                sup, n_chunks, executed = _alive_support(
+                    src0, col0, idx, n, steps, max_wedge_chunk, method, mesh
+                )
             rounds += 1
             launches += n_chunks
         else:

@@ -112,6 +112,7 @@ def load_passes() -> "dict[str, PassFn]":
     """Import the pass modules so their ``register_pass`` decorators run."""
     from . import backend_protocol  # noqa: F401
     from . import collectives  # noqa: F401
+    from . import obs_discipline  # noqa: F401
     from . import overflow  # noqa: F401
     from . import recompile  # noqa: F401
     from . import stats_lifecycle  # noqa: F401

@@ -1,0 +1,90 @@
+"""trilint pass: observability spans over device work must sync.
+
+The PR 8 bug class: JAX dispatch is asynchronous, so a span that wraps a
+kernel launch but closes without a synchronization point records the
+*enqueue* time (microseconds) instead of the device compute time — the
+trace looks implausibly fast and every derived number (stripe skew,
+overhead tables, EXPERIMENTS.md rows) is garbage.  The invariant: any
+``with ...span(...)`` block whose body launches device work must call a
+sync point (``Span.sync``/``obs.sync``/``jax.block_until_ready``) before
+the span closes.
+
+* ``D1-unsynced-span`` — a span context manager whose body calls a
+  device-work entry point but contains no sync call.
+
+"Device work" is recognized by call-name convention, matching the
+engine's kernel vocabulary: a last dotted segment that starts with
+``chunk_`` or ``intersect_``, ends with ``_chunk``, or is one of the
+known launch wrappers (``pallas_call``, ``shard_map``,
+``striped_workload_fn``).  Spans around pure-host work (parsing, CSR
+assembly, numpy folds) are exempt — host calls return only when done, so
+the span is honest without a sync.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, ModuleInfo, call_name, register_pass, walk_calls
+
+# Launch wrappers that dispatch device work without the kernel naming
+# convention (kept in sync with repro.kernels / repro.distributed).
+LAUNCH_WRAPPERS = frozenset({"pallas_call", "shard_map", "striped_workload_fn"})
+
+# Call names that prove the span waited for the device.
+SYNC_NAMES = frozenset({"sync", "block_until_ready"})
+
+
+def _is_span_call(node: ast.expr) -> bool:
+    """True for ``obs.span(...)`` / ``trc.span(...)`` / ``tracer.span(...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    return name == "span" or name.endswith(".span")
+
+
+def _is_device_work(name: str) -> bool:
+    last = name.rsplit(".", 1)[-1]
+    return (
+        last.startswith("chunk_")
+        or last.startswith("intersect_")
+        or last.endswith("_chunk")
+        or last in LAUNCH_WRAPPERS
+    )
+
+
+@register_pass("obs_discipline")
+def check_obs_discipline(mod: ModuleInfo) -> "list[Finding]":
+    findings: "list[Finding]" = []
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        if not any(_is_span_call(item.context_expr) for item in node.items):
+            continue
+
+        device_calls: "list[str]" = []
+        synced = False
+        for call in walk_calls(ast.Module(body=node.body, type_ignores=[])):
+            name = call_name(call)
+            if not name:
+                continue
+            if name.rsplit(".", 1)[-1] in SYNC_NAMES:
+                synced = True
+            elif _is_device_work(name):
+                device_calls.append(name)
+
+        if device_calls and not synced:
+            launches = ", ".join(sorted(set(device_calls)))
+            findings.append(
+                mod.finding(
+                    "obs_discipline",
+                    "D1-unsynced-span",
+                    node,
+                    f"span wraps device work ({launches}) but closes without "
+                    "a sync point; JAX dispatch is async, so the span records "
+                    "enqueue latency, not device time — call `sp.sync(...)` "
+                    "or `jax.block_until_ready` before the span exits",
+                )
+            )
+    return findings

@@ -104,12 +104,15 @@ import dataclasses
 import functools
 import math
 import os
+import time
 import warnings
 from typing import Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .count import (
     expand_and_close_wedges,
@@ -240,6 +243,20 @@ class EngineStats:
     ``straggler_stripe`` the stripe the median+MAD rule flags (usually
     ``None``: round-robin striping balances skewed degree
     distributions).
+
+    ``timings`` breaks the call's wall clock into phases (seconds):
+    ``preprocess`` / ``plan`` / ``execute`` / ``fold``.  Without an
+    active tracer the kernels stay async-dispatched, so device compute
+    bills to whichever phase first blocks on the result (``fold``);
+    under ``repro.obs`` tracing each chunk is synced as it completes and
+    ``execute`` is genuine device time.  The phases always sum to the
+    call's wall clock either way.
+
+    The ``measured_*`` fields exist only for traced distributed runs:
+    per-stripe span-measured seconds (``stripe_times``) beside the
+    load-inferred skew, with ``skew_note`` set (and a ``RuntimeWarning``
+    raised) when the two disagree about which stripe straggles — load is
+    a proxy, the measurement wins.
     """
 
     method: str                  # executed schedule, never "auto"
@@ -253,6 +270,11 @@ class EngineStats:
     n_stripes: int = 1                  # §III-E stripes (1 = single device)
     stripe_skew: float | None = None    # max/mean stripe wedge load
     straggler_stripe: int | None = None  # stripe flagged by the MAD rule
+    timings: dict | None = None          # phase → seconds (see above)
+    stripe_times: tuple[float, ...] | None = None  # measured s/stripe (traced)
+    measured_stripe_skew: float | None = None      # max/mean measured time
+    measured_straggler_stripe: int | None = None   # MAD rule on measured times
+    skew_note: str | None = None         # loud load-vs-measured disagreement
 
 
 # ---------------------------------------------------------------------------
@@ -509,7 +531,13 @@ class StripedChunk(NamedTuple):
 
 
 class WorkPlan(NamedTuple):
-    """A backend's chunking decision for one workload."""
+    """A backend's chunking decision for one workload.
+
+    ``timings`` and ``stripe_times`` are filled in by ``run_workload``
+    on the plan it returns (backends leave them at the defaults):
+    phase → seconds, and — traced distributed runs only — measured
+    per-stripe seconds from the span probe.
+    """
 
     chunks: Iterator
     n_chunks: int
@@ -517,6 +545,8 @@ class WorkPlan(NamedTuple):
     total_wedges: int  # Σ fan-out over the query edges
     n_stripes: int = 1                        # §III-E stripes (distributed)
     stripe_loads: tuple[int, ...] | None = None  # wedge slots per stripe
+    timings: dict | None = None                  # filled by run_workload
+    stripe_times: tuple[float, ...] | None = None  # filled when traced
 
 
 # ---------------------------------------------------------------------------
@@ -990,6 +1020,7 @@ def resolve_backend(
         reason = (
             f"backend {method!r} has no {kind!r} kernel; fell back to 'wedge_bsearch'"
         )
+    obs.counter("engine.capability_fallbacks").add()
     key = (method, kind)
     if key not in _warned_fallbacks:
         _warned_fallbacks.add(key)
@@ -1027,41 +1058,133 @@ def run_workload(
     ``(value, plan)`` where ``value`` is the host-accumulated result —
     ``int`` for ``"count"``, int64 ``(n_out,)`` for ``"per_node"``,
     int64 per-query-edge for ``"support"`` — and ``plan`` carries the
-    launch stats (``n_chunks``, ``peak_buffer``, ``total_wedges``).
+    launch stats (``n_chunks``, ``peak_buffer``, ``total_wedges``) plus
+    the phase ``timings``.
+
+    Observability: phase wall clocks (plan/execute/fold) are always
+    recorded — they are two ``perf_counter`` reads per phase.  Under an
+    active :mod:`repro.obs` tracer each chunk launch additionally gets a
+    span that *syncs* the partial before closing (``execute`` then
+    measures device compute, not async dispatch), and §III-E striped
+    chunks get a per-stripe timing probe (measured straggler detection).
     """
+    trc = obs.active()
+    t0 = time.perf_counter()
     plan = backend.plan(work, budget, bucket_pow2=bucket_pow2)
+    timings = {"plan": time.perf_counter() - t0, "execute": 0.0, "fold": 0.0}
     adj = _DeviceAdj(
         jnp.asarray(work.row_offsets), jnp.asarray(work.col),
         jnp.asarray(work.out_degree), work.n_steps,
     )
     san = _sanitizer()
+    obs.counter("engine.workloads").add()
+    obs.counter("engine.wedges_planned").add(plan.total_wedges)
+    obs.counter("engine.chunks_launched").add(plan.n_chunks)
+    obs.gauge("engine.peak_wedge_buffer").set(plan.peak_buffer)
+    stripe_acc: list | None = None
+
+    def launch(fn, chunk, i, *extra):
+        """One chunk launch, span-wrapped (and synced) when tracing."""
+        nonlocal stripe_acc
+        if trc is None:
+            return fn(adj, chunk, *extra)
+        with trc.span(f"{kind}.chunk", cat="engine",
+                      args={"chunk": i,
+                            "buffer": int(getattr(chunk, "buffer", 0))}) as sp:
+            part = sp.sync(fn(adj, chunk, *extra))
+        if isinstance(chunk, StripedChunk):
+            times = _probe_stripe_times(trc, adj, chunk)
+            if stripe_acc is None:
+                stripe_acc = [0.0] * len(times)
+            for s, dt in enumerate(times):
+                stripe_acc[s] += dt
+        return part
+
+    def done(value):
+        return value, plan._replace(
+            timings=timings,
+            stripe_times=tuple(stripe_acc) if stripe_acc else None,
+        )
+
     if kind == "count":
         # collect device partials first, accumulate once: launches stay
-        # async-dispatched instead of syncing host-side per chunk
-        partials = [backend.count_chunk(adj, chunk) for chunk in plan.chunks]
+        # async-dispatched instead of syncing host-side per chunk (under
+        # tracing each launch IS synced — that is the point of the span)
+        t0 = time.perf_counter()
+        partials = [
+            launch(backend.count_chunk, chunk, i)
+            for i, chunk in enumerate(plan.chunks)
+        ]
         if san is not None:
             san.check_partials(partials, kind="count")
-        return accumulate_partials(partials), plan
+        timings["execute"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        total = accumulate_partials(partials)
+        timings["fold"] = time.perf_counter() - t0
+        return done(total)
     if kind == "per_node":
         if n_out is None:
             n_out = adj.row_offsets.shape[0] - 1
         out = np.zeros((n_out,), np.int64)
+        t_loop = time.perf_counter()
         for i, chunk in enumerate(plan.chunks):
-            part = backend.per_node_chunk(adj, chunk, n_out)
+            part = launch(backend.per_node_chunk, chunk, i, n_out)
             if san is not None:
                 san.check_partial(part, kind="per_node", context=f"chunk {i}")
+            t0 = time.perf_counter()
             out += np.asarray(part, dtype=np.int64)
-        return out, plan
+            timings["fold"] += time.perf_counter() - t0
+        timings["execute"] = time.perf_counter() - t_loop - timings["fold"]
+        return done(out)
     if kind == "support":
         m_out = int(work.src_host.shape[0])
         out = np.zeros((m_out,), np.int64)
+        t_loop = time.perf_counter()
         for i, chunk in enumerate(plan.chunks):
-            part = backend.support_chunk(adj, chunk, m_out)
+            part = launch(backend.support_chunk, chunk, i, m_out)
             if san is not None:
                 san.check_partial(part, kind="support", context=f"chunk {i}")
+            t0 = time.perf_counter()
             out += np.asarray(part, dtype=np.int64)
-        return out, plan
+            timings["fold"] += time.perf_counter() - t0
+        timings["execute"] = time.perf_counter() - t_loop - timings["fold"]
+        return done(out)
     raise ValueError(f"unknown workload kind {kind!r}")
+
+
+def _probe_stripe_times(trc, adj: _DeviceAdj, chunk: StripedChunk) -> "list[float]":
+    """Measured per-stripe seconds for one §III-E striped chunk.
+
+    The striped collective executes all stripes in one fused dispatch, so
+    individual stripes are not separately observable from the host.  Under
+    tracing we therefore *re-run* the wedge-count kernel over each
+    stripe's −1-padded edge slice on the default device, synced, and
+    report those wall times — measured per-stripe cost beside the
+    load-inferred skew (Arifuzzaman et al. make load-vs-timing skew a
+    first-order concern; load is only a proxy).  One warm-up launch keeps
+    the (buffer, steps) compile out of the timed region.  Costs roughly
+    one extra pass over the chunk, paid only while a tracer is active.
+    """
+    src = np.asarray(chunk.src)
+    dst = np.asarray(chunk.dst)
+    warm = chunk_count_kernel(
+        jnp.asarray(src[0]), jnp.asarray(dst[0]),
+        adj.row_offsets, adj.col, adj.out_degree,
+        wedge_budget=chunk.buffer, n_steps=adj.n_steps,
+    )
+    jax.block_until_ready(warm)
+    times = []
+    for s in range(src.shape[0]):
+        t0 = time.perf_counter()
+        with trc.span("stripe.probe", cat="engine.stripes",
+                      args={"stripe": s}) as sp:
+            sp.sync(chunk_count_kernel(
+                jnp.asarray(src[s]), jnp.asarray(dst[s]),
+                adj.row_offsets, adj.col, adj.out_degree,
+                wedge_budget=chunk.buffer, n_steps=adj.n_steps,
+            ))
+        times.append(time.perf_counter() - t0)
+    return times
 
 
 def iter_wedge_chunks(csr: OrientedCSR, max_wedge_chunk: int | None, *, bucket_pow2: bool = False):
@@ -1211,10 +1334,11 @@ class TriangleCounter:
         oriented by a host-side filter, never re-canonicalized).
         """
         self.last_stats = None
-        csr = self._prepare(edges, n_nodes)
-        if csr is None:
-            return 0
-        return self._run(csr, "count", self._resolve(csr))
+        with obs.span("engine.count", cat="engine"):
+            csr, prep_s = self._prepare_timed(edges, n_nodes)
+            if csr is None:
+                return 0
+            return self._run(csr, "count", self._resolve(csr), prep_s)
 
     def per_node(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Per-vertex triangle incidences, int64 host array.
@@ -1227,11 +1351,12 @@ class TriangleCounter:
         executes on every mesh device.
         """
         self.last_stats = None
-        csr = self._prepare(edges, n_nodes)
-        if csr is None:
-            n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
-            return np.zeros((n,), np.int64)
-        return self._run(csr, "per_node", self._resolve(csr))
+        with obs.span("engine.per_node", cat="engine"):
+            csr, prep_s = self._prepare_timed(edges, n_nodes)
+            if csr is None:
+                n = n_nodes if n_nodes is not None else getattr(edges, "n_nodes", 0) or 0
+                return np.zeros((n,), np.int64)
+            return self._run(csr, "per_node", self._resolve(csr), prep_s)
 
     def edge_support(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Per-directed-edge triangle support, int64 host array.
@@ -1242,10 +1367,11 @@ class TriangleCounter:
         which routes through this method.
         """
         self.last_stats = None
-        csr = self._prepare(edges, n_nodes)
-        if csr is None:
-            return np.zeros((0,), np.int64)
-        return self._run(csr, "support", self._resolve(csr))
+        with obs.span("engine.support", cat="engine"):
+            csr, prep_s = self._prepare_timed(edges, n_nodes)
+            if csr is None:
+                return np.zeros((0,), np.int64)
+            return self._run(csr, "support", self._resolve(csr), prep_s)
 
     def per_node_counts(self, edges, n_nodes: int | None = None) -> np.ndarray:
         """Alias of :meth:`per_node` (clearer name for analytics callers)."""
@@ -1278,6 +1404,13 @@ class TriangleCounter:
 
     # -- shared plumbing ----------------------------------------------------
 
+    def _prepare_timed(self, edges, n_nodes: int | None):
+        """``(_prepare result, preprocess seconds)`` under a span."""
+        t0 = time.perf_counter()
+        with obs.span("engine.preprocess", cat="engine"):
+            csr = self._prepare(edges, n_nodes)
+        return csr, time.perf_counter() - t0
+
     def _prepare(self, edges, n_nodes: int | None) -> OrientedCSR | None:
         csr = prepare_oriented(edges, n_nodes)
         if csr is not None:
@@ -1303,14 +1436,33 @@ class TriangleCounter:
 
     def _record(self, method, n_chunks, peak, total_wedges, m_dir,
                 resolved=None, fallback_reason=None, stripe_loads=None,
-                n_stripes=1):
+                n_stripes=1, timings=None, stripe_times=None):
         skew = straggler = None
+        measured_skew = measured_straggler = None
+        note = None
+        load_rep = None
         if stripe_loads is not None:
             from repro.distributed.straggler import stripe_skew_report
 
-            rep = stripe_skew_report(stripe_loads)
-            skew = rep.skew
-            straggler = rep.straggler_stripe
+            load_rep = stripe_skew_report(stripe_loads)
+            skew = load_rep.skew
+            straggler = load_rep.straggler_stripe
+        if stripe_times:
+            from repro.distributed.straggler import (
+                skew_disagreement_note,
+                stripe_skew_report,
+            )
+
+            # the MAD rule works on integer loads; nanoseconds keep the
+            # measured resolution through the int coercion
+            time_rep = stripe_skew_report([int(t * 1e9) for t in stripe_times])
+            measured_skew = time_rep.skew
+            measured_straggler = time_rep.straggler_stripe
+            if load_rep is not None:
+                note = skew_disagreement_note(load_rep, time_rep)
+                if note is not None:
+                    obs.counter("engine.skew_disagreements").add()
+                    warnings.warn(note, RuntimeWarning, stacklevel=3)
         self.last_stats = EngineStats(
             method=method,
             resolved_method=resolved or method,
@@ -1323,9 +1475,15 @@ class TriangleCounter:
             n_stripes=n_stripes,
             stripe_skew=skew,
             straggler_stripe=straggler,
+            timings=timings,
+            stripe_times=tuple(stripe_times) if stripe_times else None,
+            measured_stripe_skew=measured_skew,
+            measured_straggler_stripe=measured_straggler,
+            skew_note=note,
         )
 
-    def _run(self, csr: OrientedCSR, kind: str, resolved: str):
+    def _run(self, csr: OrientedCSR, kind: str, resolved: str,
+             prep_s: float = 0.0):
         """Dispatch one workload through the capability-resolved backend."""
         backend, executed, reason = resolve_backend(
             resolved, kind, widths=self.widths, tuner=self.tuner,
@@ -1341,5 +1499,7 @@ class TriangleCounter:
             executed, plan.n_chunks, plan.peak_buffer, plan.total_wedges,
             csr.n_directed_edges, resolved=resolved, fallback_reason=reason,
             stripe_loads=plan.stripe_loads, n_stripes=plan.n_stripes,
+            timings={"preprocess": prep_s, **(plan.timings or {})},
+            stripe_times=plan.stripe_times,
         )
         return value

@@ -63,6 +63,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .engine import (
     TriangleCounter,
     WedgeChunk,
@@ -344,9 +346,13 @@ class IncrementalTriangleCounter:
         """Touched-triangle total + per-node deltas via the three probes."""
         pu = und[:, 0].astype(np.int32)
         pv = und[:, 1].astype(np.int32)
-        s_wo, p_wo, l1, k1 = self._probe(pu, pv, adj_without)
-        s_wi, p_wi, l2, k2 = self._probe(pu, pv, adj_with)
-        s_dl, p_dl, l3, k3 = self._probe(pu, pv, adj_delta)
+        probes = int(pu.shape[0])
+        with obs.span("probe.without", cat="incremental", args={"edges": probes}):
+            s_wo, p_wo, l1, k1 = self._probe(pu, pv, adj_without)
+        with obs.span("probe.with", cat="incremental", args={"edges": probes}):
+            s_wi, p_wi, l2, k2 = self._probe(pu, pv, adj_with)
+        with obs.span("probe.delta", cat="incremental", args={"edges": probes}):
+            s_dl, p_dl, l3, k3 = self._probe(pu, pv, adj_delta)
         two_new = s_wi - s_wo - s_dl
         assert two_new >= 0 and two_new % 2 == 0, (s_wi, s_wo, s_dl)
         assert s_dl % 3 == 0, s_dl

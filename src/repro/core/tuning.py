@@ -34,6 +34,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+
 from .engine import next_pow2
 
 __all__ = [
@@ -251,11 +253,14 @@ class AutoTuner:
         cfg = self.cache.get(key)
         if cfg is not None:
             self.n_hits += 1
+            obs.counter("tiles.cache_hits").add()
             return cfg.tiles
+        obs.counter("tiles.cache_misses").add()
         if not self.tune_on_miss:
             return None
         cfg = autotune_tiles(n_edges, lu, lv, iters=self.iters, seed=self.seed)
         self.cache.put(key, cfg)
         self.cache.save()
         self.n_tuned += 1
+        obs.counter("tiles.tuned").add()
         return cfg.tiles

@@ -18,6 +18,8 @@ import time
 
 import numpy as np
 
+from repro import obs
+
 from ..formats import csr_from_forward_pairs, edge_array_to_csr
 from .cache import CSRGraph, CacheError, TRICSR_VERSION, load_tricsr, save_tricsr
 from .external import ExternalSortStats, canonicalize_edges_external
@@ -127,15 +129,19 @@ def ingest(
         if os.path.exists(cache_path):
             t0 = time.perf_counter()
             try:
-                csr = load_tricsr(cache_path, mmap=mmap)
+                with obs.span("ingest.cache_load", cat="io",
+                              args={"path": os.path.basename(cache_path)}):
+                    csr = load_tricsr(cache_path, mmap=mmap)
             except CacheError:
                 pass  # stale/corrupt cache: fall through and rebuild
             else:
+                obs.counter("io.tricsr_cache_hits").add()
                 stats = IngestStats(source=src, cache_path=cache_path,
                                     cache_hit=True,
                                     load_s=time.perf_counter() - t0)
                 stats.unique_edges = csr.n_edges
                 return csr, stats
+        obs.counter("io.tricsr_cache_misses").add()
 
     # Spill sorted runs onto real disk — next to the cache, else next to
     # the source file: the system temp dir is often RAM-backed tmpfs,
@@ -157,25 +163,30 @@ def ingest(
     ext_stats = ExternalSortStats()
     t0 = time.perf_counter()
     try:
-        edges = canonicalize_edges_external(
-            iter_edge_chunks(src, max_chunk_edges, fmt=fmt),
-            max_chunk_edges=max_chunk_edges,
-            spill_dir=spill_dir,
-            stats_out=ext_stats,
-        )
+        with obs.span("ingest.parse", cat="io",
+                      args={"path": os.path.basename(src)}):
+            edges = canonicalize_edges_external(
+                iter_edge_chunks(src, max_chunk_edges, fmt=fmt),
+                max_chunk_edges=max_chunk_edges,
+                spill_dir=spill_dir,
+                stats_out=ext_stats,
+            )
     finally:
         if own_spill is not None:
             shutil.rmtree(own_spill, ignore_errors=True)
     parse_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    csr = csr_from_edge_array(edges)
+    with obs.span("ingest.csr_build", cat="io",
+                  args={"edges": int(edges.shape[0])}):
+        csr = csr_from_edge_array(edges)
     csr_build_s = time.perf_counter() - t0
 
     cache_write_s = 0.0
     if cache_path is not None:
         t0 = time.perf_counter()
-        save_tricsr(cache_path, csr)
+        with obs.span("ingest.cache_write", cat="io"):
+            save_tricsr(cache_path, csr)
         cache_write_s = time.perf_counter() - t0
         # reload through the cache so callers hold the mmap, not the heap copy
         csr = load_tricsr(cache_path, mmap=mmap, verify=True)

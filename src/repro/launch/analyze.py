@@ -28,9 +28,14 @@ import json
 import sys
 import time
 
+from repro import obs
 from repro.analytics import graph_report
 from repro.core.engine import METHODS
-from repro.launch.count import add_source_arguments, resolve_graph
+from repro.launch.count import (
+    add_source_arguments,
+    add_trace_argument,
+    resolve_graph,
+)
 
 
 def main() -> None:
@@ -52,6 +57,7 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="print one machine-readable JSON object on stdout "
                          "(progress lines go to stderr)")
+    add_trace_argument(ap)
     args = ap.parse_args()
     if args.max_wedge_chunk is not None and args.max_wedge_chunk < 1:
         ap.error("--max-wedge-chunk must be a positive number of wedge slots")
@@ -59,9 +65,16 @@ def main() -> None:
         ap.error("--top-k must be non-negative")
 
     log = functools.partial(print, file=sys.stderr) if args.json else print
+    with obs.trace_to_file(args.trace, meta={"cli": "analyze"}):
+        _run_analyze(args, log)
+    if args.trace:
+        log(f"trace written to {args.trace}")
 
+
+def _run_analyze(args, log) -> None:
     t0 = time.time()
-    graph, info = resolve_graph(args, log=log)
+    with obs.span("ingest", cat="io"):
+        graph, info = resolve_graph(args, log=log)
     build_s = time.time() - t0
 
     report = graph_report(

@@ -34,10 +34,20 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import TriangleCounter, count_triangles_numpy
 from repro.core.engine import METHODS
 from repro.graphs import GRAPH_GENERATORS, graph_stats
 from repro.graphs.io import DATASETS, ingest, materialize_dataset
+
+
+def add_trace_argument(ap: argparse.ArgumentParser) -> None:
+    """The shared ``--trace`` flag (count / analyze / serve_graph)."""
+    ap.add_argument("--trace", default=None, metavar="OUT",
+                    help="export a repro.obs trace of the whole run: "
+                         "Chrome trace-event JSON (open in Perfetto / "
+                         "chrome://tracing), or a structured JSONL event "
+                         "log if OUT ends in .jsonl")
 
 
 def build_graph(args) -> np.ndarray:
@@ -175,6 +185,7 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="print one machine-readable JSON object on stdout "
                          "(progress lines go to stderr)")
+    add_trace_argument(ap)
     args = ap.parse_args()
     if args.max_wedge_chunk is not None and args.max_wedge_chunk < 1:
         ap.error("--max-wedge-chunk must be a positive number of wedge slots")
@@ -188,9 +199,16 @@ def main() -> None:
         args.method = "auto"
 
     log = functools.partial(print, file=sys.stderr) if args.json else print
+    with obs.trace_to_file(args.trace, meta={"cli": "count"}):
+        _run_count(args, log)
+    if args.trace:
+        log(f"trace written to {args.trace}")
 
+
+def _run_count(args, log) -> None:
     t_build0 = time.time()
-    graph, info = resolve_graph(args, log=log)
+    with obs.span("ingest", cat="io"):
+        graph, info = resolve_graph(args, log=log)
     build_s = time.time() - t_build0
 
     mesh = None
@@ -283,7 +301,9 @@ def main() -> None:
                 total_wedges=es.total_wedges,
                 n_directed_edges=es.n_directed_edges,
                 fallback_reason=es.fallback_reason,
+                timings=es.timings,
             ),
+            counters=obs.metrics_snapshot()["counters"],
             graph=info.get("graph"),
             source={k: v for k, v in info.items() if k != "graph"},
             timings_s=dict(build=build_s, count=dt, baseline=baseline_s),

@@ -2,8 +2,8 @@
 
 Drives :class:`repro.core.IncrementalTriangleCounter` with a request loop
 that interleaves update batches (from ``repro.graphs.streams``) with
-count / per-node / clustering / transitivity queries, and reports p50/p99
-latency for both traffic classes::
+count / per-node / clustering / transitivity queries, and reports
+latency percentiles for both traffic classes::
 
     python -m repro.launch.serve_graph --generator kronecker --scale 10
     python -m repro.launch.serve_graph --scale 10 --stream sliding_window \\
@@ -12,6 +12,18 @@ latency for both traffic classes::
     python -m repro.launch.serve_graph --scale 10 --method pallas   # Pallas probes
     python -m repro.launch.serve_graph --dataset karate --batch-size 16
     python -m repro.launch.serve_graph --input graph.txt.gz --cache-dir ~/.cache/tricsr
+    python -m repro.launch.serve_graph --scale 10 --json \\
+        --metrics-out /tmp/serve_metrics.jsonl --report-every 16
+
+Latency accounting uses :class:`repro.obs.Pow2Histogram` per query kind
+(p50/p90/p99 from 64 power-of-two buckets — O(1) memory on unbounded
+streams, unlike the historical keep-every-sample lists), aggregated over
+a rolling window of reporting intervals so the periodic lines answer
+"p99 over the last N intervals", not "p99 since process start".
+``--report-every`` sets the interval (in batches), ``--metrics-out``
+appends one JSONL snapshot per interval, ``--json`` prints the final
+machine-readable report on stdout, and ``--trace`` exports a
+``repro.obs`` trace of the whole run.
 
 Updates run the batched delta-counting path (only triangles touched by
 the batch are recounted); queries read the maintained state, so they are
@@ -26,19 +38,36 @@ the exact path.
 from __future__ import annotations
 
 import argparse
+import functools
+import json
+import sys
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import IncrementalTriangleCounter, TriangleCounter
 from repro.graphs import STREAM_GENERATORS
-from repro.launch.count import add_source_arguments, resolve_graph
+from repro.launch.count import (
+    add_source_arguments,
+    add_trace_argument,
+    resolve_graph,
+)
+from repro.obs import RollingHistogram
 
 QUERY_KINDS = ("count", "per_node", "clustering", "transitivity")
 
 
-def _pct(lat_s, q):
-    return float(np.percentile(np.asarray(lat_s) * 1e3, q)) if lat_s else 0.0
+def _interval_snapshot(kind, interval, n_batches, elapsed_s, update_hist, query_hists):
+    """One JSON-ready latency snapshot (``kind`` = "interval" | "final")."""
+    return {
+        "kind": kind,
+        "interval": interval,
+        "batches": n_batches,
+        "elapsed_s": elapsed_s,
+        "update": update_hist.snapshot_ms(),
+        "queries": {k: h.snapshot_ms() for k, h in query_hists.items()},
+    }
 
 
 def run_service(
@@ -50,20 +79,62 @@ def run_service(
     max_wedge_chunk: int | None = None,
     method: str = "auto",
     mesh=None,
+    report_every: int | None = None,
+    window_intervals: int = 8,
+    metrics_sink=None,
+    log=None,
 ):
-    """Apply ``stream`` batches interleaved with queries; return a report."""
+    """Apply ``stream`` batches interleaved with queries; return a report.
+
+    Latencies land in per-traffic-class pow2 histograms.  Every
+    ``report_every`` batches the current interval is sealed: its
+    snapshot goes to ``metrics_sink`` (a callable taking one JSON-ready
+    dict — the ``--metrics-out`` writer) and ``log`` (if given) prints
+    rolling-window percentiles over the last ``window_intervals``
+    intervals.  The returned report keeps the historical flat keys
+    (``update_p50_ms`` … ``updates_per_s``, now histogram-estimated over
+    the whole run) and adds per-query-kind and rolling-window detail
+    under ``"latency"``.
+    """
     counter = IncrementalTriangleCounter(
         n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk, method=method, mesh=mesh
     )
-    update_lat, query_lat = [], []
-    n_batches = n_inserted = n_deleted = 0
+    update_hist = RollingHistogram(window_intervals)
+    query_hists = {k: RollingHistogram(window_intervals) for k in QUERY_KINDS}
+    n_batches = n_inserted = n_deleted = n_queries = 0
     qi = 0
+    interval = 0
+    t_start = time.perf_counter()
+
+    def seal_interval():
+        nonlocal interval
+        interval += 1
+        sealed_update = update_hist.rotate()
+        sealed_queries = {k: h.rotate() for k, h in query_hists.items()}
+        if metrics_sink is not None:
+            metrics_sink(_interval_snapshot(
+                "interval", interval, n_batches,
+                time.perf_counter() - t_start, sealed_update, sealed_queries,
+            ))
+        if log is not None:
+            win = update_hist.windowed()
+            qwin = {k: h.windowed() for k, h in query_hists.items()}
+            qp99 = max((h.percentile(99) for h in qwin.values() if h.n), default=0.0)
+            log(f"[interval {interval}] {n_batches} batches; rolling "
+                f"update p50 {win.percentile(50)*1e3:.2f} ms / "
+                f"p99 {win.percentile(99)*1e3:.2f} ms; "
+                f"worst query-kind p99 {qp99*1e3:.3f} ms")
+
     for batch in stream:
         if max_batches is not None and n_batches >= max_batches:
             break
         t0 = time.perf_counter()
-        counter.apply(insert=batch.insert, delete=batch.delete)
-        update_lat.append(time.perf_counter() - t0)
+        with obs.span("serve.update", cat="serve",
+                      args={"batch": n_batches,
+                            "insert": int(batch.insert.shape[0]),
+                            "delete": int(batch.delete.shape[0])}):
+            counter.apply(insert=batch.insert, delete=batch.delete)
+        update_hist.observe(time.perf_counter() - t0)
         n_batches += 1
         n_inserted += batch.insert.shape[0]
         n_deleted += batch.delete.shape[0]
@@ -71,26 +142,56 @@ def run_service(
             kind = QUERY_KINDS[qi % len(QUERY_KINDS)]
             qi += 1
             t0 = time.perf_counter()
-            if kind == "count":
-                _ = counter.count
-            elif kind == "per_node":
-                _ = counter.per_node()
-            elif kind == "clustering":
-                _ = counter.clustering()
-            else:
-                _ = counter.transitivity()
-            query_lat.append(time.perf_counter() - t0)
-    return counter, dict(
+            with obs.span("serve.query", cat="serve", args={"kind": kind}):
+                if kind == "count":
+                    _ = counter.count
+                elif kind == "per_node":
+                    _ = counter.per_node()
+                elif kind == "clustering":
+                    _ = counter.clustering()
+                else:
+                    _ = counter.transitivity()
+            query_hists[kind].observe(time.perf_counter() - t0)
+            n_queries += 1
+        if report_every is not None and n_batches % report_every == 0:
+            seal_interval()
+
+    if metrics_sink is not None:
+        metrics_sink(_interval_snapshot(
+            "final", interval, n_batches, time.perf_counter() - t_start,
+            update_hist.lifetime,
+            {k: h.lifetime for k, h in query_hists.items()},
+        ))
+
+    # whole-run percentiles: merge the per-kind lifetime histograms for
+    # the aggregate query figures the historical report shape exposes
+    query_all = update_hist.lifetime.__class__()
+    for h in query_hists.values():
+        query_all.merge(h.lifetime)
+    up = update_hist.lifetime
+    report = dict(
         n_batches=n_batches,
         n_inserted=n_inserted,
         n_deleted=n_deleted,
-        n_queries=len(query_lat),
-        update_p50_ms=_pct(update_lat, 50),
-        update_p99_ms=_pct(update_lat, 99),
-        query_p50_ms=_pct(query_lat, 50),
-        query_p99_ms=_pct(query_lat, 99),
-        updates_per_s=(n_inserted + n_deleted) / max(sum(update_lat), 1e-12),
+        n_queries=n_queries,
+        update_p50_ms=up.percentile(50) * 1e3 if up.n else 0.0,
+        update_p99_ms=up.percentile(99) * 1e3 if up.n else 0.0,
+        query_p50_ms=query_all.percentile(50) * 1e3 if query_all.n else 0.0,
+        query_p99_ms=query_all.percentile(99) * 1e3 if query_all.n else 0.0,
+        updates_per_s=(n_inserted + n_deleted) / max(up.total_ns / 1e9, 1e-12),
+        latency=dict(
+            intervals=interval,
+            update=up.snapshot_ms(),
+            queries={k: h.lifetime.snapshot_ms() for k, h in query_hists.items()},
+            window=dict(
+                intervals=min(interval + 1, window_intervals),
+                update=update_hist.windowed().snapshot_ms(),
+                queries={k: h.windowed().snapshot_ms()
+                         for k, h in query_hists.items()},
+            ),
+        ),
     )
+    return counter, report
 
 
 def main() -> None:
@@ -118,21 +219,48 @@ def main() -> None:
                          "§III-E-style over a mesh of all local devices)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the final from-scratch oracle recount")
+    ap.add_argument("--report-every", type=int, default=32, metavar="N",
+                    help="seal a latency interval every N update batches: "
+                         "print rolling-window percentiles and append a "
+                         "snapshot to --metrics-out (default: %(default)s)")
+    ap.add_argument("--latency-window", type=int, default=8, metavar="K",
+                    help="intervals in the rolling percentile window "
+                         "(default: %(default)s)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
+                    help="append one JSON latency snapshot per interval "
+                         "(plus a final lifetime record)")
+    ap.add_argument("--json", action="store_true",
+                    help="print one machine-readable JSON report on stdout "
+                         "(progress lines go to stderr)")
+    add_trace_argument(ap)
     args = ap.parse_args()
     if args.window is not None and args.window < 1:
         ap.error("--window must be a positive number of live edges")
     if args.batch_size < 1:
         ap.error("--batch-size must be positive")
+    if args.report_every < 1:
+        ap.error("--report-every must be positive")
+    if args.latency_window < 1:
+        ap.error("--latency-window must be positive")
 
+    log = functools.partial(print, file=sys.stderr) if args.json else print
+    with obs.trace_to_file(args.trace, meta={"cli": "serve_graph"}):
+        _run_serve(args, log)
+    if args.trace:
+        log(f"trace written to {args.trace}")
+
+
+def _run_serve(args, log) -> None:
     mesh = None
     if args.method == "distributed":
         import jax
 
         devs = jax.devices()
         mesh = jax.sharding.Mesh(np.array(devs), ("edges",))
-        print(f"mesh: {len(devs)} device(s) striped on axis 'edges'")
+        log(f"mesh: {len(devs)} device(s) striped on axis 'edges'")
 
-    graph, info = resolve_graph(args)
+    with obs.span("ingest", cat="io"):
+        graph, info = resolve_graph(args, log=log)
     # streams consume edge arrays; a cached CSR seed materializes one
     # (the cheap direction — one np.repeat over the memory-mapped CSR)
     edges = graph.edge_array() if hasattr(graph, "edge_array") else graph
@@ -144,34 +272,55 @@ def main() -> None:
         stream = STREAM_GENERATORS[args.stream](
             edges, window=window, batch_size=args.batch_size, seed=args.seed
         )
-        print(f"stream: sliding_window(window={window}, batch={args.batch_size})")
+        log(f"stream: sliding_window(window={window}, batch={args.batch_size})")
     else:
         stream = STREAM_GENERATORS[args.stream](
             edges, batch_size=args.batch_size, seed=args.seed
         )
-        print(f"stream: temporal(batch={args.batch_size})")
+        log(f"stream: temporal(batch={args.batch_size})")
 
-    counter, rep = run_service(
-        stream,
-        n_nodes=stats["n_nodes"],
-        max_batches=args.max_batches,
-        queries_per_batch=args.queries_per_batch,
-        max_wedge_chunk=args.max_wedge_chunk,
-        method=args.method,
-        mesh=mesh,
-    )
+    sink = None
+    metrics_file = None
+    if args.metrics_out:
+        metrics_file = open(args.metrics_out, "a")
+
+        def sink(snap):
+            metrics_file.write(json.dumps(snap, sort_keys=True) + "\n")
+            metrics_file.flush()
+
+    try:
+        counter, rep = run_service(
+            stream,
+            n_nodes=stats["n_nodes"],
+            max_batches=args.max_batches,
+            queries_per_batch=args.queries_per_batch,
+            max_wedge_chunk=args.max_wedge_chunk,
+            method=args.method,
+            mesh=mesh,
+            report_every=args.report_every,
+            window_intervals=args.latency_window,
+            metrics_sink=sink,
+            log=log,
+        )
+    finally:
+        if metrics_file is not None:
+            metrics_file.close()
     if counter.last_update_stats is not None:
-        print(f"probe backend: {counter.last_update_stats.probe_method}")
-    print(f"served {rep['n_batches']} update batches "
-          f"(+{rep['n_inserted']}/-{rep['n_deleted']} edges, "
-          f"{rep['updates_per_s']:.0f} edge-updates/s) "
-          f"and {rep['n_queries']} queries")
-    print(f"update latency: p50 {rep['update_p50_ms']:.2f} ms, "
-          f"p99 {rep['update_p99_ms']:.2f} ms")
-    print(f"query  latency: p50 {rep['query_p50_ms']:.3f} ms, "
-          f"p99 {rep['query_p99_ms']:.3f} ms")
-    print(f"live graph: {counter.n_edges} edges, T = {counter.count}")
+        log(f"probe backend: {counter.last_update_stats.probe_method}")
+    log(f"served {rep['n_batches']} update batches "
+        f"(+{rep['n_inserted']}/-{rep['n_deleted']} edges, "
+        f"{rep['updates_per_s']:.0f} edge-updates/s) "
+        f"and {rep['n_queries']} queries")
+    log(f"update latency: p50 {rep['update_p50_ms']:.2f} ms, "
+        f"p99 {rep['update_p99_ms']:.2f} ms")
+    log(f"query  latency: p50 {rep['query_p50_ms']:.3f} ms, "
+        f"p99 {rep['query_p99_ms']:.3f} ms")
+    for kind, snap in rep["latency"]["queries"].items():
+        log(f"  {kind:13s} n={snap['n']:<6d} p50 {snap['p50_ms']:.3f} ms, "
+            f"p90 {snap['p90_ms']:.3f} ms, p99 {snap['p99_ms']:.3f} ms")
+    log(f"live graph: {counter.n_edges} edges, T = {counter.count}")
 
+    verified = None
     if not args.no_verify:
         tc = TriangleCounter(
             method=args.method, max_wedge_chunk=args.max_wedge_chunk, mesh=mesh
@@ -181,7 +330,21 @@ def main() -> None:
             raise SystemExit(
                 f"VERIFY FAILED: incremental T={counter.count} != oracle {expect}"
             )
-        print(f"verify: from-scratch recount agrees (T = {expect})")
+        log(f"verify: from-scratch recount agrees (T = {expect})")
+        verified = True
+
+    if args.json:
+        out = dict(
+            rep,
+            triangles=int(counter.count),
+            n_edges=int(counter.n_edges),
+            probe_method=(counter.last_update_stats.probe_method
+                          if counter.last_update_stats is not None else None),
+            verified=verified,
+            source={k: v for k, v in info.items() if k != "graph"},
+            counters=obs.metrics_snapshot()["counters"],
+        )
+        print(json.dumps(out, indent=None, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""trilint fixture: deliberate obs-discipline violation (D1).
+
+Parsed, never imported.  The first span wraps a kernel launch but closes
+without a sync point — under JAX's async dispatch the span measures
+enqueue latency, not device time.  The second span syncs and is
+compliant; the third wraps pure-host work and needs no sync.
+"""
+
+
+def chunk_count_kernel(src, dst):  # stand-in kernel (naming convention)
+    return src + dst
+
+
+def save_stuff(path, data):  # host work: returns only when done
+    return len(data)
+
+
+def unsynced(obs, adj, chunk):
+    # D1: kernel launch inside the span, no sync before it closes.
+    with obs.span("count.chunk", cat="engine"):
+        part = chunk_count_kernel(chunk, adj)
+    return part
+
+
+def synced(obs, adj, chunk):
+    # compliant: the launch result is materialized before the span exits.
+    with obs.span("count.chunk", cat="engine") as sp:
+        part = sp.sync(chunk_count_kernel(chunk, adj))
+    return part
+
+
+def host_only(obs, data):
+    # compliant: host work is synchronous; no sync point required.
+    with obs.span("ingest.cache_write", cat="io"):
+        save_stuff("/tmp/x", data)

@@ -55,6 +55,7 @@ def codes(findings):
             },
         ),
         ("stats_lifecycle", "core/bad_stats_lifecycle.py", {"S1-stale-stats"}),
+        ("obs_discipline", "core/bad_obs_discipline.py", {"D1-unsynced-span"}),
     ],
 )
 def test_pass_flags_seeded_fixture(passname, fixture, expected_codes):
@@ -64,6 +65,17 @@ def test_pass_flags_seeded_fixture(passname, fixture, expected_codes):
         f"{passname} missed codes {expected_codes - codes(in_fixture)}; "
         f"got {[f.render() for f in findings]}"
     )
+
+
+def test_obs_discipline_synced_and_host_spans_not_flagged():
+    findings = run_checks(FIXTURES, select=["obs_discipline"])
+    in_fixture = [
+        f for f in findings
+        if f.path == "core/bad_obs_discipline.py" and not f.suppressed
+    ]
+    # exactly the one unsynced span: the synced and host-only spans pass
+    assert len(in_fixture) == 1, [f.render() for f in in_fixture]
+    assert "chunk_count_kernel" in in_fixture[0].message
 
 
 def test_stats_lifecycle_compliant_method_not_flagged():
@@ -139,7 +151,8 @@ def test_cli_json_clean_on_repo():
     report = json.loads(r.stdout)
     assert report["counts"]["unsuppressed"] == 0
     assert set(report["passes"]) == {
-        "overflow", "recompile", "collectives", "backend_protocol", "stats_lifecycle",
+        "overflow", "recompile", "collectives", "backend_protocol",
+        "stats_lifecycle", "obs_discipline",
     }
 
 

@@ -1,0 +1,345 @@
+"""repro.obs tests: span tracer, counters, histograms, exporters, and the
+engine/analytics integration (spans measure phases, timings reconcile)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.tracer import _NoopSpan
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_state():
+    """Every test starts with tracing off and fresh metrics."""
+    obs.reset_metrics()
+    yield
+    if obs.enabled():
+        obs.stop_tracing()
+    obs.reset_metrics()
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+
+
+def test_nested_spans_record_close_order_and_depth():
+    with obs.tracing() as t:
+        with obs.span("outer", cat="t"):
+            with obs.span("inner_a", cat="t"):
+                pass
+            with obs.span("inner_b", cat="t"):
+                pass
+    names = [e["name"] for e in t.events]
+    assert names == ["inner_a", "inner_b", "outer"]  # children close first
+    depths = {e["name"]: e["depth"] for e in t.events}
+    assert depths == {"outer": 0, "inner_a": 1, "inner_b": 1}
+    outer = t.events[-1]
+    for child in t.events[:-1]:
+        assert child["ts_ns"] >= outer["ts_ns"]
+        assert child["ts_ns"] + child["dur_ns"] <= outer["ts_ns"] + outer["dur_ns"]
+
+
+def test_span_exception_safety_records_event_and_restores_depth():
+    with obs.tracing() as t:
+        with pytest.raises(ValueError):
+            with obs.span("boom"):
+                raise ValueError("x")
+        # depth restored: the next span is a sibling at depth 0
+        with obs.span("after"):
+            pass
+    boom, after = t.events
+    assert boom["name"] == "boom" and boom["error"] == "ValueError"
+    assert boom["depth"] == 0 and after["depth"] == 0
+
+
+def test_span_set_attaches_args():
+    with obs.tracing() as t:
+        with obs.span("s", args={"a": 1}) as sp:
+            sp.set(b=2)
+    assert t.events[0]["args"] == {"a": 1, "b": 2}
+
+
+def test_disabled_span_is_the_shared_noop_singleton():
+    # the near-zero-overhead contract: disabled span() allocates nothing —
+    # every call returns the same module-level singleton
+    assert not obs.enabled()
+    s1 = obs.span("anything", cat="x", args={"k": 1})
+    s2 = obs.span("else")
+    assert s1 is s2 is obs.NOOP_SPAN
+    assert isinstance(s1, _NoopSpan)
+    with s1 as sp:
+        obj = object()
+        assert sp.sync(obj) is obj  # identity, no jax import
+        assert sp.set(x=1) is sp
+
+
+def test_disabled_sync_is_identity():
+    obj = object()
+    assert obs.sync(obj) is obj
+
+
+def test_nested_start_tracing_raises():
+    obs.start_tracing()
+    with pytest.raises(RuntimeError, match="already active"):
+        obs.start_tracing()
+    t = obs.stop_tracing()
+    assert t is not None and obs.active() is None
+
+
+def test_instant_records_zero_duration_marker():
+    with obs.tracing() as t:
+        t.instant("mark", cat="x", args={"n": 3})
+    (ev,) = t.events
+    assert ev["dur_ns"] == 0 and ev["args"] == {"n": 3}
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges
+
+
+def test_counter_and_gauge_round_trip():
+    obs.counter("a.hits").add()
+    obs.counter("a.hits").add(2)
+    obs.gauge("a.level").set(7)
+    obs.gauge("a.level").set(11)  # last write wins
+    snap = obs.metrics_snapshot()
+    assert snap["counters"]["a.hits"] == 3
+    assert snap["gauges"]["a.level"] == 11
+    obs.reset_metrics()
+    assert obs.metrics_snapshot() == {"counters": {}, "gauges": {}}
+
+
+def test_registry_isolated_instances():
+    r = obs.MetricsRegistry()
+    r.counter("x").add(5)
+    assert r.snapshot()["counters"]["x"] == 5
+    assert "x" not in obs.metrics_snapshot()["counters"]
+
+
+# ---------------------------------------------------------------------------
+# pow2 histograms (serve_graph latency satellite)
+
+
+def test_pow2_histogram_percentiles_bracket_observations():
+    h = obs.Pow2Histogram()
+    for ms in (1.0, 2.0, 4.0, 8.0, 100.0):
+        h.observe(ms / 1e3)
+    assert h.n == 5
+    p50 = h.percentile(50)
+    assert 2e-3 <= p50 <= 8e-3  # seconds: median is in the 2–8ms range
+    assert h.percentile(99) <= 2 * 100e-3  # p99 within bucket of the max
+    snap = h.snapshot_ms()
+    assert snap["n"] == 5 and snap["p99_ms"] >= snap["p50_ms"] > 0
+
+
+def test_pow2_histogram_merge_adds_counts():
+    a, b = obs.Pow2Histogram(), obs.Pow2Histogram()
+    a.observe_ns(1000)
+    b.observe_ns(1000)
+    b.observe_ns(2000)
+    a.merge(b)
+    assert a.n == 3 and a.total_ns == 4000
+
+
+def test_rolling_histogram_window_vs_lifetime():
+    rh = obs.RollingHistogram(window=2)
+    rh.observe(0.001)
+    rh.rotate()
+    rh.observe(0.002)
+    rh.rotate()
+    rh.observe(0.004)
+    # lifetime keeps everything; the 2-interval window dropped the first
+    assert rh.lifetime.n == 3
+    assert rh.windowed().n == 2
+
+
+# ---------------------------------------------------------------------------
+# exporters + validators
+
+
+def _traced_sample():
+    with obs.tracing() as t:
+        with obs.span("outer", cat="t"):
+            with obs.span("inner", cat="t", args={"k": 1}):
+                pass
+    return t
+
+
+def test_chrome_trace_round_trip_validates(tmp_path):
+    t = _traced_sample()
+    obj = obs.to_chrome_trace(t, metrics=obs.metrics_snapshot(), meta={"m": 1})
+    assert obs.validate_chrome_trace(obj) == 2
+    assert obj["otherData"]["schema"] == obs.SCHEMA
+    assert obj["otherData"]["meta"] == {"m": 1}
+    # file round trip via extension dispatch
+    path = tmp_path / "trace.json"
+    obs.write_trace(str(path), t)
+    assert obs.validate_chrome_trace(json.loads(path.read_text())) == 2
+
+
+def test_jsonl_trace_round_trip_validates(tmp_path):
+    t = _traced_sample()
+    path = tmp_path / "trace.jsonl"
+    obs.write_trace(str(path), t, meta={"cli": "test"})
+    records = [json.loads(line) for line in path.read_text().splitlines()]
+    assert obs.validate_jsonl_records(records) == 2
+    assert records[0]["meta"] == {"cli": "test"}
+    assert records[-1]["kind"] == "metrics"
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="traceEvents"):
+        obs.validate_chrome_trace({})
+    with pytest.raises(ValueError, match="negative"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{"name": "x", "ph": "X", "ts": -1, "dur": 1,
+                              "pid": 0, "tid": 0, "args": {"depth": 0}}]}
+        )
+    with pytest.raises(ValueError, match="depth"):
+        obs.validate_chrome_trace(
+            {"traceEvents": [{"name": "x", "ph": "X", "ts": 0, "dur": 1,
+                              "pid": 0, "tid": 0}]}
+        )
+    # a depth-1 span whose would-be parent doesn't contain it
+    bad_nest = {
+        "traceEvents": [
+            {"name": "child", "ph": "X", "ts": 100.0, "dur": 50.0,
+             "pid": 0, "tid": 0, "args": {"depth": 1}},
+            {"name": "parent", "ph": "X", "ts": 0.0, "dur": 60.0,
+             "pid": 0, "tid": 0, "args": {"depth": 0}},
+        ]
+    }
+    with pytest.raises(ValueError, match="not contained"):
+        obs.validate_chrome_trace(bad_nest)
+
+
+def test_validate_jsonl_rejects_missing_header_or_tail():
+    t = _traced_sample()
+    records = obs.to_jsonl_records(t)
+    with pytest.raises(ValueError, match="meta header"):
+        obs.validate_jsonl_records(records[1:])
+    with pytest.raises(ValueError, match="metrics"):
+        obs.validate_jsonl_records(records[:-1])
+
+
+def test_trace_to_file_none_is_noop_scope():
+    with obs.trace_to_file(None) as t:
+        assert t is None and not obs.enabled()
+
+
+def test_trace_to_file_writes_artifact_with_counters(tmp_path):
+    path = tmp_path / "t.json"
+    with obs.trace_to_file(str(path), meta={"cli": "unit"}):
+        obs.counter("unit.ticks").add(4)
+        with obs.span("work"):
+            pass
+    obj = json.loads(path.read_text())
+    assert obs.validate_chrome_trace(obj) == 1
+    assert obj["otherData"]["metrics"]["counters"]["unit.ticks"] == 4
+    assert obj["otherData"]["meta"]["cli"] == "unit"
+
+
+def test_env_fingerprint_has_stdlib_and_jax_fields():
+    fp = obs.env_fingerprint()
+    assert fp["python"] and fp["platform"]
+    assert fp["jax"] is not None  # jax is installed in the test env
+    assert fp["device_count"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# measured stripe skew satellite: disagreement note
+
+
+def test_skew_disagreement_note():
+    from repro.distributed.straggler import (
+        skew_disagreement_note,
+        stripe_skew_report,
+    )
+
+    load = stripe_skew_report([100, 100, 100, 400])
+    agree = stripe_skew_report([10, 10, 10, 40])
+    disagree = stripe_skew_report([400, 100, 100, 100])
+    assert skew_disagreement_note(load, agree) is None
+    note = skew_disagreement_note(load, disagree)
+    assert note is not None and "disagreement" in note
+    assert "stripe 3" in note and "stripe 0" in note
+
+
+# ---------------------------------------------------------------------------
+# engine + analytics integration
+
+
+def test_engine_count_emits_spans_and_timings(small_graphs):
+    from repro.core import TriangleCounter
+
+    edges = small_graphs["kron"]
+    tc = TriangleCounter(method="wedge_bsearch")
+    t_plain = tc.count(edges)  # warm the jit cache untraced
+
+    with obs.tracing() as t:
+        t_traced = tc.count(edges)
+    assert t_traced == t_plain
+
+    names = [e["name"] for e in t.events]
+    assert "engine.count" in names
+    assert "engine.preprocess" in names
+    assert "count.chunk" in names
+
+    es = tc.last_stats
+    assert es.timings is not None
+    assert set(es.timings) == {"preprocess", "plan", "execute", "fold"}
+    assert all(v >= 0 for v in es.timings.values())
+    # the phase breakdown must reconcile with the span-measured wall
+    span_wall = next(e for e in t.events if e["name"] == "engine.count")
+    wall_s = span_wall["dur_ns"] / 1e9
+    total = sum(es.timings.values())
+    assert abs(total - wall_s) <= max(0.1 * wall_s, 0.005), (total, wall_s)
+
+
+def test_untraced_count_still_fills_timings(small_graphs):
+    from repro.core import TriangleCounter
+
+    tc = TriangleCounter(method="wedge_bsearch")
+    tc.count(small_graphs["kron"])
+    assert not obs.enabled()
+    assert tc.last_stats.timings is not None
+    assert tc.last_stats.timings["preprocess"] >= 0
+
+
+def test_graph_report_traces_all_stages(small_graphs):
+    from repro.analytics import graph_report
+
+    graph_report(small_graphs["kron"])  # warm untraced
+    with obs.tracing() as t:
+        rep = graph_report(small_graphs["kron"])
+    names = {e["name"] for e in t.events}
+    for stage in ("report.preprocess", "report.count", "report.clustering",
+                  "report.support", "report.truss"):
+        assert stage in names, (stage, sorted(names))
+    assert "truss.round" in names
+    # exported form of the full analytics run validates
+    assert obs.validate_chrome_trace(obs.to_chrome_trace(t)) == len(t.events)
+    assert rep["engine"]["timings"] is not None
+
+
+def test_engine_counters_accumulate(small_graphs):
+    from repro.core import TriangleCounter
+
+    TriangleCounter(method="wedge_bsearch").count(small_graphs["kron"])
+    counters = obs.metrics_snapshot()["counters"]
+    assert counters["engine.workloads"] == 1
+    assert counters["engine.chunks_launched"] >= 1
+    assert counters["engine.wedges_planned"] > 0
+
+
+def test_incremental_probe_spans(small_graphs):
+    from repro.core.incremental import IncrementalTriangleCounter
+
+    tc = IncrementalTriangleCounter(small_graphs["triangle"])
+    with obs.tracing() as t:
+        tc.insert(np.array([[0, 9], [9, 1]]))
+    names = [e["name"] for e in t.events]
+    for n in ("probe.without", "probe.with", "probe.delta"):
+        assert n in names, names
