@@ -20,6 +20,7 @@ from . import (
     kernel_micro,
     multidevice,
     section5_approx,
+    serving,
     streaming,
     table1_runtime,
     table2_roofline,
@@ -35,6 +36,7 @@ SUITES = {
     "section5": section5_approx.run,   # §V       — exact vs DOULION
     "kernels": kernel_micro.run,       # Pallas kernel micro-sweeps
     "chunking": engine_chunking.run,   # engine — memory-bounded partitioning
+    "serving": serving.run,            # multi-tenant service: batching, snapshots
     "streaming": streaming.run,        # incremental updates vs full recount
     "ingest": ingest.run,              # out-of-core parse/canonicalize/cache
     "analytics": analytics.run,        # support / k-truss / clustering

@@ -1,0 +1,161 @@
+"""Serving: batched vs sequential throughput, per-class latency, snapshots.
+
+The multi-tenant service's headline claim is the batched-inference one:
+under concurrent clients, fusing a dispatch window of queries into one
+engine pass multiplies throughput by roughly the window size, because
+the pass — not the per-request bookkeeping — is the cost.  This suite
+measures exactly that, closed-loop, at increasing client counts:
+
+* ``serving/fused-c{N}``    — default admission policies (fusion on),
+  N clients; derived carries qps, per-class p50/p99, and the
+  fused-queries / engine-passes accounting that proves batching ran.
+* ``serving/sequential-c{N}`` — identical offered load with
+  ``max_batch=1`` policies (every query its own engine pass); the
+  contrast arm.  The fused row's derived includes the speedup.
+* ``serving/mixed-stream``  — queries racing a live update stream
+  through a session tenant (update + point + node classes together).
+* ``serving/snapshot-roundtrip`` — session state save + restore wall
+  time through the checkpoint subsystem.
+
+Every load row asserts answer correctness (the service's count equals
+the engine oracle) before timing is reported.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.core import TriangleCounter
+from repro.graphs import STREAM_GENERATORS, kronecker_rmat
+from repro.serve import (
+    ClassPolicy,
+    DEFAULT_POLICIES,
+    GraphManager,
+    GraphService,
+    SnapshotStore,
+    StreamSession,
+    run_load,
+)
+
+from .common import quick, timeit
+
+GRAPH = "com-dblp"  # offline: deterministic Kronecker fallback at --fallback-scale
+
+
+def _sequential_policies():
+    """Fusion disabled: every class dispatches one request per window."""
+    return {
+        c: ClassPolicy(max_queue=p.max_queue, timeout_s=p.timeout_s, max_batch=1)
+        for c, p in DEFAULT_POLICIES.items()
+    }
+
+
+def _fmt_lat(latency: dict) -> str:
+    return ";".join(
+        f"{cls}_p50={snap['p50_ms']:.3f}ms,{cls}_p99={snap['p99_ms']:.3f}ms"
+        for cls, snap in sorted(latency.items())
+    )
+
+
+def _load_row(cache_dir: str, scale: int, clients: int, requests: int,
+              expect: int, policies=None) -> dict:
+    mgr = GraphManager(cache_dir)
+    with GraphService(mgr, policies=policies) as svc:
+        svc.attach(GRAPH, GRAPH, fallback_scale=scale)
+        got = svc.query(GRAPH, "count", timeout=600.0)
+        assert got == expect, (got, expect)
+        # warm every kernel the mix can hit before the timed load — the
+        # arms must compare dispatch policies, not compile caches
+        for kind in ("per_node", "clustering", "transitivity"):
+            svc.query(GRAPH, kind, timeout=600.0)
+        rep = run_load(svc, GRAPH, clients=clients,
+                       requests_per_client=requests, seed=clients)
+    assert rep["errors"]["other"] == 0, rep["errors"]
+    return rep
+
+
+def run():
+    scale = 7 if quick() else 9
+    client_counts = (1, 2, 4) if quick() else (1, 2, 4, 8)
+    requests = 8 if quick() else 24
+
+    rows = []
+    with tempfile.TemporaryDirectory() as cache_dir:
+        # oracle count for the fallback graph (engine, no service)
+        mgr = GraphManager(cache_dir)
+        mgr.attach(GRAPH, GRAPH, fallback_scale=scale)
+        with mgr.lease(GRAPH) as ent:
+            expect = TriangleCounter(method="auto").count(ent.csr)
+            n_edges = int(np.asarray(ent.csr.col).shape[0]) // 2
+
+        for c in client_counts:
+            seq = _load_row(cache_dir, scale, c, requests, expect,
+                            policies=_sequential_policies())
+            fused = _load_row(cache_dir, scale, c, requests, expect)
+            speedup = fused["qps"] / max(seq["qps"], 1e-9)
+            rows.append((
+                f"serving/sequential-c{c}",
+                seq["elapsed_s"] / max(seq["n_ok"], 1) * 1e6,
+                f"qps={seq['qps']:.1f};passes={seq['counters']['serve.engine_passes']};"
+                f"{_fmt_lat(seq['latency'])}",
+            ))
+            rows.append((
+                f"serving/fused-c{c}",
+                fused["elapsed_s"] / max(fused["n_ok"], 1) * 1e6,
+                f"qps={fused['qps']:.1f};speedup={speedup:.2f}x;"
+                f"fused_queries={fused['counters']['serve.fused_queries']};"
+                f"passes={fused['counters']['serve.engine_passes']};"
+                f"{_fmt_lat(fused['latency'])}",
+            ))
+
+        # mixed update+query traffic through a stream-session tenant
+        edges = kronecker_rmat(scale, seed=0)
+        n_nodes = int(edges.max()) + 1
+        stream = STREAM_GENERATORS["temporal"](edges, batch_size=256, seed=1)
+        mgr = GraphManager(cache_dir)
+        with GraphService(mgr) as svc:
+            svc.open_session("live", n_nodes=n_nodes)
+            rep = run_load(
+                svc, "live",
+                clients=2 if quick() else 4,
+                requests_per_client=requests,
+                update_stream=stream,
+                max_updates=8 if quick() else 32,
+                seed=7,
+            )
+            live_count = svc.query("live", "count", timeout=600.0)
+            oracle = TriangleCounter(method="auto").count(
+                svc.session("live").counter.current_edges(), n_nodes=n_nodes)
+        assert live_count == oracle, (live_count, oracle)
+        rows.append((
+            "serving/mixed-stream",
+            rep["elapsed_s"] / max(rep["n_ok"] + rep["n_updates"], 1) * 1e6,
+            f"qps={rep['qps']:.1f};updates={rep['n_updates']};T={live_count};"
+            f"{_fmt_lat(rep['latency'])}",
+        ))
+
+        # snapshot/restore round-trip on the live session's state
+        sess = StreamSession("snap", n_nodes=n_nodes)
+        for i, batch in enumerate(
+                STREAM_GENERATORS["temporal"](edges, batch_size=512, seed=2)):
+            sess.apply(insert=batch.insert, delete=batch.delete)
+            if i >= (3 if quick() else 8):
+                break
+        with tempfile.TemporaryDirectory() as snap_dir:
+            store = SnapshotStore(snap_dir, keep=2)
+
+            def roundtrip():
+                store.save(sess)
+                hit = store.restore_session("snap")
+                assert hit is not None
+                assert hit[0].counter.count == sess.counter.count
+
+            us = timeit(roundtrip, warmup=1, iters=2)
+        rows.append((
+            "serving/snapshot-roundtrip",
+            us,
+            f"edges={sess.counter.n_edges};T={sess.counter.count};"
+            f"graph_edges={n_edges}",
+        ))
+    return rows

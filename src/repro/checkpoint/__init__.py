@@ -1,5 +1,6 @@
 """Fault-tolerant checkpointing."""
 from .checkpoint import (
+    FORMAT_VERSION,
     CheckpointManager,
     save_checkpoint,
     restore_checkpoint,
@@ -8,6 +9,7 @@ from .checkpoint import (
 )
 
 __all__ = [
+    "FORMAT_VERSION",
     "CheckpointManager",
     "save_checkpoint",
     "restore_checkpoint",

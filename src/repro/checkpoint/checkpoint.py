@@ -3,24 +3,39 @@
 Layout::
 
     <dir>/step_000123/
-        manifest.json     # step, tree paths, shapes, dtypes, crc32 per leaf
+        manifest.json     # format_version, step, tree paths, shapes, dtypes,
+                          # crc32 per leaf
         arrays.npz        # one entry per leaf, key = flattened tree path
         COMMIT            # written last; a checkpoint without it is torn
 
-Fault-tolerance contract:
+Fault-tolerance contract (the ``.tricsr`` cache's durability bar, which
+the serving layer's snapshot/restore path now depends on):
 
-* ``save`` writes into ``step_X.tmp`` and atomically renames, then drops a
-  ``COMMIT`` marker — a crash mid-save can never shadow an older valid
-  checkpoint.
-* ``restore_latest`` walks checkpoints newest-first, validating the COMMIT
-  marker and per-leaf CRCs, and falls back to the previous one on
-  corruption.
+* The manifest carries ``format_version``; a version mismatch (or a
+  manifest written before versioning existed) is treated exactly like
+  corruption — skipped, never half-read.
+* Every leaf is integrity-checked on restore: shape, dtype **and**
+  crc32 of the raw bytes must match the manifest.
+* ``save`` stages into ``step_X.tmp`` and publishes by rename.
+  Overwriting an existing step moves the old directory aside *before*
+  the rename and removes it only after the new one is in place — there
+  is never a window in which a crash leaves neither (the seed deleted
+  the old checkpoint first, so a crash between the delete and the
+  rename lost both).
+* ``restore_latest`` walks checkpoints newest-first, validating the
+  COMMIT marker and the full manifest, and falls back to the previous
+  one on any torn/truncated/corrupted/mis-versioned candidate.
 * arrays are stored **unsharded** (gathered); ``restore`` takes an
   optional ``shardings`` pytree and ``device_put``s each leaf — restoring
   onto a *different* mesh shape (elastic restart) is therefore free.
 * ``CheckpointManager(async_save=True)`` snapshots to host memory
   synchronously and writes in a background thread (double-buffered, one
-  in-flight save).
+  in-flight save).  ``save``/``wait`` are thread-safe, background
+  errors surface on the next ``save()`` *or* ``wait()``, and the
+  retention GC only ever prunes **committed** checkpoints other than
+  the one currently in flight — a torn directory from a crashed writer
+  (or another process mid-publish) is never counted toward ``keep`` and
+  never deleted out from under an in-flight rename.
 """
 from __future__ import annotations
 
@@ -35,12 +50,18 @@ import jax
 import numpy as np
 
 __all__ = [
+    "FORMAT_VERSION",
     "save_checkpoint",
     "restore_checkpoint",
     "restore_latest",
     "list_checkpoints",
     "CheckpointManager",
 ]
+
+# bumped from the (implicit, unversioned) seed format: manifests now
+# declare themselves, so a future layout change invalidates old
+# checkpoints loudly instead of misreading them
+FORMAT_VERSION = 2
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -49,10 +70,6 @@ def _flatten(tree) -> dict[str, np.ndarray]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         flat[key] = np.asarray(leaf)
     return flat
-
-
-def _tree_def(tree):
-    return jax.tree_util.tree_structure(tree)
 
 
 def save_checkpoint(directory: str, step: int, tree: Any, extra: dict | None = None) -> str:
@@ -65,6 +82,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: dict | None = N
     os.makedirs(tmp)
     flat = _flatten(tree)
     manifest = {
+        "format_version": FORMAT_VERSION,
         "step": step,
         "extra": extra or {},
         "leaves": {
@@ -81,9 +99,18 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: dict | None = N
         json.dump(manifest, f)
     with open(os.path.join(tmp, "COMMIT"), "w") as f:
         f.write("ok")
+    # publish: the old step (if any) moves aside before the rename and is
+    # removed only after the new directory holds the name, so at every
+    # instant at least one committed copy of this step exists on disk
+    old = None
     if os.path.exists(final):
-        shutil.rmtree(final)
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
     return final
 
 
@@ -92,7 +119,7 @@ def list_checkpoints(directory: str) -> list[tuple[int, str]]:
         return []
     out = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
+        if name.startswith("step_") and not name.endswith((".tmp", ".old")):
             try:
                 out.append((int(name[5:]), os.path.join(directory, name)))
             except ValueError:
@@ -101,20 +128,26 @@ def list_checkpoints(directory: str) -> list[tuple[int, str]]:
 
 
 def _validate(path: str) -> dict | None:
+    """The manifest if ``path`` is a complete, uncorrupted checkpoint."""
     if not os.path.exists(os.path.join(path, "COMMIT")):
         return None
     try:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
+        if manifest.get("format_version") != FORMAT_VERSION:
+            return None
         with np.load(os.path.join(path, "arrays.npz")) as z:
             for key, meta in manifest["leaves"].items():
                 arr = z[key]
                 if list(arr.shape) != meta["shape"]:
                     return None
+                if str(arr.dtype) != meta["dtype"]:
+                    return None
                 if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
                     return None
         return manifest
     except Exception:
+        # truncated npz, unreadable json, missing leaf — all torn
         return None
 
 
@@ -148,47 +181,74 @@ def restore_latest(directory: str, target: Any, shardings: Any | None = None):
 
 
 class CheckpointManager:
-    """Rolling checkpoints with optional async (background-thread) save."""
+    """Rolling checkpoints with optional async (background-thread) save.
+
+    Thread-safe: concurrent ``save``/``wait`` calls serialize on an
+    internal lock (at most one in-flight background write), and the
+    retention GC prunes only *committed* checkpoints, never the one the
+    in-flight thread is still publishing.
+    """
 
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self._lock = threading.RLock()
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
+        self._inflight_step: int | None = None
 
     def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
-        self.wait()  # one in-flight save max
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
-        # Snapshot to host synchronously — device buffers may mutate next step.
-        host_tree = jax.tree.map(lambda x: np.array(x), tree)
+        with self._lock:
+            self.wait()  # one in-flight save max; raises a pending error
+            # Snapshot to host synchronously — device buffers may mutate
+            # next step.
+            host_tree = jax.tree.map(lambda x: np.array(x), tree)
+            self._inflight_step = step
 
-        def _do():
-            try:
-                save_checkpoint(self.directory, step, host_tree, extra)
-                self._gc()
-            except Exception as e:  # surfaced on next save()/wait()
-                self._error = e
+            def _do():
+                try:
+                    save_checkpoint(self.directory, step, host_tree, extra)
+                    self._gc(protect=step)
+                except Exception as e:  # surfaced on next save()/wait()
+                    self._error = e
 
-        if self.async_save:
-            self._thread = threading.Thread(target=_do, daemon=True)
-            self._thread.start()
-        else:
-            _do()
+            if self.async_save:
+                self._thread = threading.Thread(target=_do, daemon=True)
+                self._thread.start()
+            else:
+                _do()
+                self._inflight_step = None
+                if self._error is not None:
+                    err, self._error = self._error, None
+                    raise err
+
+    def wait(self) -> None:
+        """Join any in-flight save; raises its error here if it failed."""
+        with self._lock:
+            if self._thread is not None:
+                self._thread.join()
+                self._thread = None
+                self._inflight_step = None
             if self._error is not None:
                 err, self._error = self._error, None
                 raise err
 
-    def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-
-    def _gc(self) -> None:
-        ckpts = list_checkpoints(self.directory)
-        for _, path in ckpts[: -self.keep]:
+    def _gc(self, protect: int | None = None) -> None:
+        # only COMMITted checkpoints count toward (or are pruned by) the
+        # retention budget: a torn dir from a crashed writer — or another
+        # process mid-publish — is neither trusted nor deleted
+        committed = [
+            (step, path)
+            for step, path in list_checkpoints(self.directory)
+            if step != protect and step != self._inflight_step
+            and os.path.exists(os.path.join(path, "COMMIT"))
+        ]
+        survivors = self.keep - (1 if protect is not None else 0)
+        doomed = committed[:-survivors] if survivors > 0 else committed
+        for _, path in doomed:
             shutil.rmtree(path, ignore_errors=True)
 
     def restore_latest(self, target: Any, shardings: Any | None = None):

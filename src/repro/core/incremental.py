@@ -232,6 +232,76 @@ class IncrementalTriangleCounter:
         dst = (self._adj & _MASK32).astype(np.int32)
         return np.stack([src, dst], axis=1)
 
+    # -- snapshot/restore (the serving layer's durability hook) -------------
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """The complete maintained state as a flat array tree.
+
+        Everything an exact resume needs: the canonical directed-key
+        adjacency, the global count, the per-node incidences and the
+        degree histogram.  The arrays are copies —
+        :class:`repro.checkpoint.CheckpointManager` can write them from
+        a background thread while updates keep mutating ``self``.
+        """
+        return {
+            "adj": self._adj.copy(),
+            "per_node": self._per_node.copy(),
+            "deg": self._deg.copy(),
+            "count": np.asarray(self._count, np.int64),
+            "n_nodes": np.asarray(self._n, np.int64),
+        }
+
+    @classmethod
+    def from_state(
+        cls,
+        state: dict,
+        *,
+        max_wedge_chunk: int | None = None,
+        method: str = "auto",
+        mesh=None,
+    ):
+        """Rebuild a counter from :meth:`state_dict` output, validated.
+
+        The kernel-facing knobs (``max_wedge_chunk``, ``method``,
+        ``mesh``) are *not* part of the state — a snapshot taken by a
+        wedge-probe service restores cleanly into a pallas-probe one.
+        Cross-field consistency is checked (sorted unique adjacency,
+        matching array lengths, degrees that re-derive from the
+        adjacency) so a logically inconsistent snapshot fails loudly
+        here instead of corrupting every later delta.
+        """
+        n = int(np.asarray(state["n_nodes"]))
+        self = cls(
+            n_nodes=n or None, max_wedge_chunk=max_wedge_chunk,
+            method=method, mesh=mesh,
+        )
+        adj = np.array(state["adj"], np.int64, copy=True).reshape(-1)
+        per_node = np.array(state["per_node"], np.int64, copy=True).reshape(-1)
+        deg = np.array(state["deg"], np.int64, copy=True).reshape(-1)
+        count = int(np.asarray(state["count"]))
+        if adj.shape[0] % 2:
+            raise ValueError("adjacency holds both directions: length must be even")
+        if adj.shape[0] and np.any(np.diff(adj) <= 0):
+            raise ValueError("adjacency keys must be strictly increasing")
+        if per_node.shape[0] != n or deg.shape[0] != n:
+            raise ValueError(
+                f"per_node/deg length ({per_node.shape[0]}/{deg.shape[0]}) "
+                f"!= n_nodes ({n})"
+            )
+        if count < 0:
+            raise ValueError(f"negative triangle count {count}")
+        src = (adj >> np.int64(32)).astype(np.int64)
+        if adj.shape[0] and (src.min() < 0 or src.max() >= n):
+            raise ValueError("adjacency source ids outside [0, n_nodes)")
+        rederived = np.bincount(src, minlength=n).astype(np.int64)
+        if not np.array_equal(rederived, deg):
+            raise ValueError("degree histogram does not match the adjacency")
+        self._adj = adj
+        self._per_node = per_node
+        self._deg = deg
+        self._count = count
+        return self
+
     # -- update API ---------------------------------------------------------
 
     def insert(self, edges) -> int:

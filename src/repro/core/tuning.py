@@ -26,6 +26,7 @@ than the heuristic).  Writes are atomic (tmp + rename).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -149,12 +150,42 @@ def autotune_tiles(
     return best
 
 
+@contextlib.contextmanager
+def _cache_write_lock(path: str):
+    """Advisory exclusive lock serializing read-merge-write cycles.
+
+    ``fcntl.flock`` on a ``.lock`` sidecar where available (POSIX); on
+    platforms without it the merge still runs — the window shrinks to
+    the read→replace gap instead of disappearing, and the write itself
+    stays atomic either way.
+    """
+    try:
+        import fcntl
+    except ImportError:  # non-POSIX: atomic replace only
+        yield
+        return
+    fd = os.open(path + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        fcntl.flock(fd, fcntl.LOCK_UN)
+        os.close(fd)
+
+
 class TileCache:
     """Versioned on-disk store of per-shape tile picks.
 
     The JSON payload is ``{"version", "backend", "entries": {key: {...}}}``;
     loading discards the file on a version or jax-backend mismatch so a
     cache tuned on TPU never steers a CPU run (or vice versa).
+
+    Safe for **concurrent use**: two engines tuning different shapes
+    into the same cache file cannot lose each other's entries —
+    :meth:`save` is an atomic read-merge-write (under an advisory file
+    lock where the platform has one) with last-writer-wins per *key*,
+    not per file.  The seed wrote the instance's in-memory view over the
+    whole file, so whichever engine saved last erased the other's picks.
     """
 
     def __init__(self, path: str | os.PathLike | None = None):
@@ -162,7 +193,8 @@ class TileCache:
         self.entries: dict[str, TileConfig] = {}
         self.loaded_from_disk = False
         if self.path is not None and os.path.exists(self.path):
-            self._load()
+            self.entries = self._read_disk_entries()
+            self.loaded_from_disk = bool(self.entries)
 
     @staticmethod
     def _backend() -> str:
@@ -170,25 +202,27 @@ class TileCache:
 
         return jax.default_backend()
 
-    def _load(self) -> None:
+    def _read_disk_entries(self) -> dict[str, TileConfig]:
+        """Current on-disk entries; {} on missing/corrupt/mismatched file."""
         try:
             with open(self.path) as f:
                 payload = json.load(f)
         except (OSError, json.JSONDecodeError):
-            return
+            return {}
         if (
             payload.get("version") != CACHE_VERSION
             or payload.get("backend") != self._backend()
         ):
-            return
+            return {}
+        out: dict[str, TileConfig] = {}
         for key, ent in payload.get("entries", {}).items():
             try:
-                self.entries[key] = TileConfig(
+                out[key] = TileConfig(
                     int(ent["block_edges"]), int(ent["tlv"]), float(ent.get("us", 0.0))
                 )
             except (KeyError, TypeError, ValueError):
                 continue
-        self.loaded_from_disk = True
+        return out
 
     def get(self, key: str) -> TileConfig | None:
         return self.entries.get(key)
@@ -197,30 +231,33 @@ class TileCache:
         self.entries[key] = cfg
 
     def save(self) -> None:
-        """Atomic write (tmp file + rename) of the full entry set."""
+        """Atomic read-merge-write: disk entries ∪ ours, ours win per key."""
         if self.path is None:
             return
-        payload = {
-            "version": CACHE_VERSION,
-            "backend": self._backend(),
-            "entries": {
-                k: {"block_edges": c.block_edges, "tlv": c.tlv, "us": c.us}
-                for k, c in sorted(self.entries.items())
-            },
-        }
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
+        with _cache_write_lock(self.path):
+            merged = {**self._read_disk_entries(), **self.entries}
+            payload = {
+                "version": CACHE_VERSION,
+                "backend": self._backend(),
+                "entries": {
+                    k: {"block_edges": c.block_edges, "tlv": c.tlv, "us": c.us}
+                    for k, c in sorted(merged.items())
+                },
+            }
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            self.entries = merged
 
 
 class AutoTuner:

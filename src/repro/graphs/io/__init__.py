@@ -54,6 +54,7 @@ from .registry import (
     DATASETS,
     get_dataset,
     materialize_dataset,
+    resolve_to_csr,
 )
 
 __all__ = [
@@ -84,4 +85,5 @@ __all__ = [
     "DATASETS",
     "get_dataset",
     "materialize_dataset",
+    "resolve_to_csr",
 ]

@@ -31,7 +31,14 @@ from .cache import CSRGraph
 from .ingest import IngestStats, ingest
 from .parsers import DEFAULT_CHUNK_EDGES
 
-__all__ = ["Dataset", "DATASETS", "get_dataset", "materialize_dataset", "karate_edges"]
+__all__ = [
+    "Dataset",
+    "DATASETS",
+    "get_dataset",
+    "materialize_dataset",
+    "resolve_to_csr",
+    "karate_edges",
+]
 
 
 # Zachary's karate club (the classic 34-node, 78-edge, 45-triangle
@@ -241,6 +248,47 @@ def _download(ds: Dataset, dest: str) -> None:
     with open(sidecar, "w") as fh:
         fh.write(digest + "\n")
     os.replace(tmp, dest)
+
+
+def resolve_to_csr(
+    source: str,
+    cache_dir: str | os.PathLike,
+    *,
+    max_chunk_edges: int = DEFAULT_CHUNK_EDGES,
+    fallback_scale: int | None = None,
+    allow_download: bool | None = None,
+    mmap: bool = True,
+) -> tuple[CSRGraph, dict]:
+    """Resolve a *source spec* — dataset name or file path — to a CSR.
+
+    The serving layer's graph manager admits graphs by a single string:
+    a registry dataset name goes through :func:`materialize_dataset`
+    (download / offline fallback / ``.tricsr`` cache hit), anything else
+    is treated as an on-disk edge list and goes through
+    :func:`~repro.graphs.io.ingest.ingest`.  Returns ``(csr, info)``
+    where ``info`` is a JSON-ready provenance dict (the shape the CLIs'
+    ``--json`` reports already use: ``source``, ``ingest`` stats, and
+    ``expected_triangles`` when the registry pins an oracle).
+    """
+    if source in DATASETS:
+        csr, stats, ds = materialize_dataset(
+            source, cache_dir, allow_download=allow_download,
+            max_chunk_edges=max_chunk_edges, fallback_scale=fallback_scale,
+            mmap=mmap,
+        )
+        real = stats.source_kind == "download" or ds.name == "karate"
+        info = dict(
+            source="dataset", dataset=ds.name, ingest=stats.as_dict(),
+            expected_triangles=ds.triangles if real else None,
+        )
+        return csr, info
+    csr, stats = ingest(
+        source, cache_dir=cache_dir, max_chunk_edges=max_chunk_edges, mmap=mmap
+    )
+    return csr, dict(
+        source="input", path=os.fspath(source), ingest=stats.as_dict(),
+        expected_triangles=None,
+    )
 
 
 def materialize_dataset(

@@ -1,39 +1,34 @@
-"""Graph-query service over an edge stream — the ROADMAP serving workload.
+"""Graph-query serving CLI — thin front-end over :mod:`repro.serve`.
 
-Drives :class:`repro.core.IncrementalTriangleCounter` with a request loop
-that interleaves update batches (from ``repro.graphs.streams``) with
-count / per-node / clustering / transitivity queries, and reports
-latency percentiles for both traffic classes::
+The drive loop itself lives in :func:`repro.serve.session.drive_stream`
+(single-tenant: update batches from :mod:`repro.graphs.streams`
+interleaved with count / per-node / clustering / transitivity queries,
+pow2 latency histograms per traffic class, rolling-window interval
+reports).  This module keeps the historical CLI surface — every flag
+and every ``--json`` report key is unchanged — and adds the
+snapshot/resume flags the serving subsystem provides::
 
     python -m repro.launch.serve_graph --generator kronecker --scale 10
     python -m repro.launch.serve_graph --scale 10 --stream sliding_window \\
         --window 20000 --batch-size 512 --queries-per-batch 8
-    python -m repro.launch.serve_graph --scale 12 --max-wedge-chunk 1048576
-    python -m repro.launch.serve_graph --scale 10 --method pallas   # Pallas probes
     python -m repro.launch.serve_graph --dataset karate --batch-size 16
-    python -m repro.launch.serve_graph --input graph.txt.gz --cache-dir ~/.cache/tricsr
     python -m repro.launch.serve_graph --scale 10 --json \\
         --metrics-out /tmp/serve_metrics.jsonl --report-every 16
 
-Latency accounting uses :class:`repro.obs.Pow2Histogram` per query kind
-(p50/p90/p99 from 64 power-of-two buckets — O(1) memory on unbounded
-streams, unlike the historical keep-every-sample lists), aggregated over
-a rolling window of reporting intervals so the periodic lines answer
-"p99 over the last N intervals", not "p99 since process start".
-``--report-every`` sets the interval (in batches), ``--metrics-out``
-appends one JSONL snapshot per interval, ``--json`` prints the final
-machine-readable report on stdout, and ``--trace`` exports a
-``repro.obs`` trace of the whole run.
+    # kill-safe serving: snapshot every 64 batches; a rerun with
+    # --resume restores the newest valid snapshot and picks the stream
+    # up mid-flight (identical final state to an uninterrupted run)
+    python -m repro.launch.serve_graph --scale 10 --max-batches 512 \\
+        --snapshot-dir /tmp/serve_snap --snapshot-every 64
+    python -m repro.launch.serve_graph --scale 10 --max-batches 1024 \\
+        --snapshot-dir /tmp/serve_snap --resume
 
-Updates run the batched delta-counting path (only triangles touched by
-the batch are recounted); queries read the maintained state, so they are
-microseconds regardless of graph size.  Unless ``--no-verify`` is given,
-the final maintained count is checked against a from-scratch
-``TriangleCounter(method="auto")`` recount of the live edge set and the
-process exits non-zero on any mismatch — a speedup from a wrong count is
-worthless.  Under overload, exact incremental updates can be traded for
-DOULION sparsified recounts (``repro.core.approx``); this loop serves
-the exact path.
+Unless ``--no-verify`` is given, the final maintained count is checked
+against a from-scratch ``TriangleCounter`` recount of the live edge set
+and the process exits non-zero on any mismatch — a speedup from a wrong
+count is worthless.  The multi-tenant service (admission queues, query
+fusion, graph residency) is :class:`repro.serve.GraphService`; its load
+generator CLI is ``python -m repro.serve.loadgen``.
 """
 from __future__ import annotations
 
@@ -41,157 +36,24 @@ import argparse
 import functools
 import json
 import sys
-import time
 
 import numpy as np
 
 from repro import obs
-from repro.core import IncrementalTriangleCounter, TriangleCounter
+from repro.core import TriangleCounter
 from repro.graphs import STREAM_GENERATORS
 from repro.launch.count import (
     add_source_arguments,
     add_trace_argument,
     resolve_graph,
 )
-from repro.obs import RollingHistogram
-
-QUERY_KINDS = ("count", "per_node", "clustering", "transitivity")
-
-
-def _interval_snapshot(kind, interval, n_batches, elapsed_s, update_hist, query_hists):
-    """One JSON-ready latency snapshot (``kind`` = "interval" | "final")."""
-    return {
-        "kind": kind,
-        "interval": interval,
-        "batches": n_batches,
-        "elapsed_s": elapsed_s,
-        "update": update_hist.snapshot_ms(),
-        "queries": {k: h.snapshot_ms() for k, h in query_hists.items()},
-    }
+from repro.serve import SnapshotStore, drive_stream
+from repro.serve.session import QUERY_KINDS  # noqa: F401  (legacy re-export)
 
 
-def run_service(
-    stream,
-    *,
-    n_nodes: int,
-    max_batches: int | None = None,
-    queries_per_batch: int = 4,
-    max_wedge_chunk: int | None = None,
-    method: str = "auto",
-    mesh=None,
-    report_every: int | None = None,
-    window_intervals: int = 8,
-    metrics_sink=None,
-    log=None,
-):
-    """Apply ``stream`` batches interleaved with queries; return a report.
-
-    Latencies land in per-traffic-class pow2 histograms.  Every
-    ``report_every`` batches the current interval is sealed: its
-    snapshot goes to ``metrics_sink`` (a callable taking one JSON-ready
-    dict — the ``--metrics-out`` writer) and ``log`` (if given) prints
-    rolling-window percentiles over the last ``window_intervals``
-    intervals.  The returned report keeps the historical flat keys
-    (``update_p50_ms`` … ``updates_per_s``, now histogram-estimated over
-    the whole run) and adds per-query-kind and rolling-window detail
-    under ``"latency"``.
-    """
-    counter = IncrementalTriangleCounter(
-        n_nodes=n_nodes, max_wedge_chunk=max_wedge_chunk, method=method, mesh=mesh
-    )
-    update_hist = RollingHistogram(window_intervals)
-    query_hists = {k: RollingHistogram(window_intervals) for k in QUERY_KINDS}
-    n_batches = n_inserted = n_deleted = n_queries = 0
-    qi = 0
-    interval = 0
-    t_start = time.perf_counter()
-
-    def seal_interval():
-        nonlocal interval
-        interval += 1
-        sealed_update = update_hist.rotate()
-        sealed_queries = {k: h.rotate() for k, h in query_hists.items()}
-        if metrics_sink is not None:
-            metrics_sink(_interval_snapshot(
-                "interval", interval, n_batches,
-                time.perf_counter() - t_start, sealed_update, sealed_queries,
-            ))
-        if log is not None:
-            win = update_hist.windowed()
-            qwin = {k: h.windowed() for k, h in query_hists.items()}
-            qp99 = max((h.percentile(99) for h in qwin.values() if h.n), default=0.0)
-            log(f"[interval {interval}] {n_batches} batches; rolling "
-                f"update p50 {win.percentile(50)*1e3:.2f} ms / "
-                f"p99 {win.percentile(99)*1e3:.2f} ms; "
-                f"worst query-kind p99 {qp99*1e3:.3f} ms")
-
-    for batch in stream:
-        if max_batches is not None and n_batches >= max_batches:
-            break
-        t0 = time.perf_counter()
-        with obs.span("serve.update", cat="serve",
-                      args={"batch": n_batches,
-                            "insert": int(batch.insert.shape[0]),
-                            "delete": int(batch.delete.shape[0])}):
-            counter.apply(insert=batch.insert, delete=batch.delete)
-        update_hist.observe(time.perf_counter() - t0)
-        n_batches += 1
-        n_inserted += batch.insert.shape[0]
-        n_deleted += batch.delete.shape[0]
-        for _ in range(queries_per_batch):
-            kind = QUERY_KINDS[qi % len(QUERY_KINDS)]
-            qi += 1
-            t0 = time.perf_counter()
-            with obs.span("serve.query", cat="serve", args={"kind": kind}):
-                if kind == "count":
-                    _ = counter.count
-                elif kind == "per_node":
-                    _ = counter.per_node()
-                elif kind == "clustering":
-                    _ = counter.clustering()
-                else:
-                    _ = counter.transitivity()
-            query_hists[kind].observe(time.perf_counter() - t0)
-            n_queries += 1
-        if report_every is not None and n_batches % report_every == 0:
-            seal_interval()
-
-    if metrics_sink is not None:
-        metrics_sink(_interval_snapshot(
-            "final", interval, n_batches, time.perf_counter() - t_start,
-            update_hist.lifetime,
-            {k: h.lifetime for k, h in query_hists.items()},
-        ))
-
-    # whole-run percentiles: merge the per-kind lifetime histograms for
-    # the aggregate query figures the historical report shape exposes
-    query_all = update_hist.lifetime.__class__()
-    for h in query_hists.values():
-        query_all.merge(h.lifetime)
-    up = update_hist.lifetime
-    report = dict(
-        n_batches=n_batches,
-        n_inserted=n_inserted,
-        n_deleted=n_deleted,
-        n_queries=n_queries,
-        update_p50_ms=up.percentile(50) * 1e3 if up.n else 0.0,
-        update_p99_ms=up.percentile(99) * 1e3 if up.n else 0.0,
-        query_p50_ms=query_all.percentile(50) * 1e3 if query_all.n else 0.0,
-        query_p99_ms=query_all.percentile(99) * 1e3 if query_all.n else 0.0,
-        updates_per_s=(n_inserted + n_deleted) / max(up.total_ns / 1e9, 1e-12),
-        latency=dict(
-            intervals=interval,
-            update=up.snapshot_ms(),
-            queries={k: h.lifetime.snapshot_ms() for k, h in query_hists.items()},
-            window=dict(
-                intervals=min(interval + 1, window_intervals),
-                update=update_hist.windowed().snapshot_ms(),
-                queries={k: h.windowed().snapshot_ms()
-                         for k, h in query_hists.items()},
-            ),
-        ),
-    )
-    return counter, report
+def run_service(stream, **kwargs):
+    """Back-compat alias for :func:`repro.serve.session.drive_stream`."""
+    return drive_stream(stream, **kwargs)
 
 
 def main() -> None:
@@ -204,7 +66,9 @@ def main() -> None:
                          "the graph's undirected edges)")
     ap.add_argument("--batch-size", type=int, default=512)
     ap.add_argument("--max-batches", type=int, default=None,
-                    help="stop after this many update batches (default: drain)")
+                    help="stop after this many update batches, counted from "
+                         "the stream's start even when resuming (default: "
+                         "drain)")
     ap.add_argument("--queries-per-batch", type=int, default=4)
     ap.add_argument("--max-wedge-chunk", type=int, default=None,
                     help="wedge-buffer budget per launch, applied to every "
@@ -229,6 +93,19 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
                     help="append one JSON latency snapshot per interval "
                          "(plus a final lifetime record)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="checkpoint the session state (count, per-node "
+                         "incidences, adjacency, stream cursor) into DIR")
+    ap.add_argument("--snapshot-every", type=int, default=64, metavar="N",
+                    help="snapshot every N applied batches when "
+                         "--snapshot-dir is set (default: %(default)s; a "
+                         "final snapshot is always written at exit)")
+    ap.add_argument("--keep-snapshots", type=int, default=3, metavar="K",
+                    help="rolling snapshot retention (default: %(default)s)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest valid snapshot from "
+                         "--snapshot-dir and resume the stream mid-flight "
+                         "(fresh start if none is restorable)")
     ap.add_argument("--json", action="store_true",
                     help="print one machine-readable JSON report on stdout "
                          "(progress lines go to stderr)")
@@ -242,6 +119,12 @@ def main() -> None:
         ap.error("--report-every must be positive")
     if args.latency_window < 1:
         ap.error("--latency-window must be positive")
+    if args.snapshot_every < 1:
+        ap.error("--snapshot-every must be positive")
+    if args.keep_snapshots < 1:
+        ap.error("--keep-snapshots must be positive")
+    if args.resume and args.snapshot_dir is None:
+        ap.error("--resume requires --snapshot-dir")
 
     log = functools.partial(print, file=sys.stderr) if args.json else print
     with obs.trace_to_file(args.trace, meta={"cli": "serve_graph"}):
@@ -279,6 +162,24 @@ def _run_serve(args, log) -> None:
         )
         log(f"stream: temporal(batch={args.batch_size})")
 
+    store = session = None
+    if args.snapshot_dir is not None:
+        store = SnapshotStore(args.snapshot_dir, keep=args.keep_snapshots)
+        if args.resume:
+            hit = store.restore_session(
+                "serve_graph",
+                max_wedge_chunk=args.max_wedge_chunk,
+                method=args.method,
+                mesh=mesh,
+            )
+            if hit is not None:
+                session = hit[0]
+                log(f"resume: restored snapshot at cursor {session.cursor} "
+                    f"({session.counter.n_edges} edges, "
+                    f"T = {session.counter.count})")
+            else:
+                log("resume: no restorable snapshot; starting fresh")
+
     sink = None
     metrics_file = None
     if args.metrics_out:
@@ -289,7 +190,7 @@ def _run_serve(args, log) -> None:
             metrics_file.flush()
 
     try:
-        counter, rep = run_service(
+        counter, rep = drive_stream(
             stream,
             n_nodes=stats["n_nodes"],
             max_batches=args.max_batches,
@@ -301,6 +202,9 @@ def _run_serve(args, log) -> None:
             window_intervals=args.latency_window,
             metrics_sink=sink,
             log=log,
+            session=session,
+            snapshot_store=store,
+            snapshot_every=args.snapshot_every if store is not None else None,
         )
     finally:
         if metrics_file is not None:
@@ -319,6 +223,9 @@ def _run_serve(args, log) -> None:
         log(f"  {kind:13s} n={snap['n']:<6d} p50 {snap['p50_ms']:.3f} ms, "
             f"p90 {snap['p90_ms']:.3f} ms, p99 {snap['p99_ms']:.3f} ms")
     log(f"live graph: {counter.n_edges} edges, T = {counter.count}")
+    if store is not None and "resume" in rep:
+        log(f"snapshots: {rep['resume']['snapshots_written']} written to "
+            f"{args.snapshot_dir} (cursor {rep['resume']['cursor']})")
 
     verified = None
     if not args.no_verify:

@@ -46,7 +46,7 @@ from .export import (
     validate_jsonl_records,
     write_trace,
 )
-from .hist import N_BUCKETS, Pow2Histogram, RollingHistogram
+from .hist import N_BUCKETS, ConcurrentHistogram, Pow2Histogram, RollingHistogram
 from .tracer import (
     NOOP_SPAN,
     Span,
@@ -67,6 +67,7 @@ __all__ = [
     "N_BUCKETS",
     "NOOP_SPAN",
     "Pow2Histogram",
+    "ConcurrentHistogram",
     "RollingHistogram",
     "SCHEMA",
     "Span",

@@ -20,8 +20,9 @@ process start".  Stdlib-only.
 from __future__ import annotations
 
 import collections
+import threading
 
-__all__ = ["N_BUCKETS", "Pow2Histogram", "RollingHistogram"]
+__all__ = ["N_BUCKETS", "Pow2Histogram", "ConcurrentHistogram", "RollingHistogram"]
 
 N_BUCKETS = 64  # 2^63 ns ≈ 292 years: every representable latency fits
 
@@ -92,6 +93,32 @@ class Pow2Histogram:
             "p90_ms": pct["p90"] * 1e3,
             "p99_ms": pct["p99"] * 1e3,
         }
+
+
+class ConcurrentHistogram(Pow2Histogram):
+    """A :class:`Pow2Histogram` safe for concurrent observers.
+
+    ``counts[b] += 1`` is a read-modify-write — many client threads
+    observing into one shared histogram (the serve load generator's
+    per-traffic-class instruments) would drop samples without the lock.
+    Reads (:meth:`percentile`, :meth:`snapshot_ms`) stay lock-free: they
+    run after the observers join, or tolerate a torn-in-flight view for
+    progress reporting.
+    """
+
+    __slots__ = ("_lock",)
+
+    def __init__(self):
+        super().__init__()
+        self._lock = threading.Lock()
+
+    def observe_ns(self, ns: int) -> None:
+        with self._lock:
+            super().observe_ns(ns)
+
+    def merge(self, other: "Pow2Histogram") -> "Pow2Histogram":
+        with self._lock:
+            return super().merge(other)
 
 
 class RollingHistogram:

@@ -1,0 +1,70 @@
+"""Multi-tenant graph serving: admission, batching, residency, snapshots.
+
+The ROADMAP's serving north star as a subsystem.  Layering::
+
+    loadgen  ──►  GraphService  ──►  TriangleCounter / IncrementalTriangleCounter
+                   │    │    │
+        AdmissionQueue  │   StreamSession ──► SnapshotStore ──► repro.checkpoint
+                 GraphManager ──► repro.graphs.io (.tricsr mmaps)
+
+* :mod:`~repro.serve.admission` — per-traffic-class bounded queues,
+  timeout/overflow policies, window batching.
+* :mod:`~repro.serve.manager` — multi-graph LRU residency under a byte
+  budget; one shared autotuner tile cache for every engine.
+* :mod:`~repro.serve.service` — lane dispatchers fusing concurrent
+  queries on a graph into one engine pass (answers bit-identical to
+  sequential execution).
+* :mod:`~repro.serve.session` — streaming tenants: incremental counter
+  state + stream cursor; the single-tenant ``drive_stream`` loop behind
+  ``python -m repro.launch.serve_graph``.
+* :mod:`~repro.serve.snapshot` — kill-safe snapshot/restore of session
+  state through the checkpoint subsystem.
+* :mod:`~repro.serve.loadgen` — concurrent-client load generator and CI
+  fusion attestation.
+"""
+from .admission import (
+    AdmissionQueue,
+    ClassPolicy,
+    QueryTimeout,
+    QueueOverflow,
+    Request,
+    Ticket,
+)
+from .manager import GraphEntry, GraphManager
+from .service import (
+    DEFAULT_POLICIES,
+    HEAVY_LANE,
+    KIND_TO_CLASS,
+    READ_LANE,
+    UPDATE_LANE,
+    GraphService,
+)
+from .session import QUERY_KINDS, StreamSession, drive_stream
+from .snapshot import SnapshotStore, load_latest_state, session_template
+from .loadgen import DEFAULT_MIX, attest_fusion, run_load
+
+__all__ = [
+    "AdmissionQueue",
+    "ClassPolicy",
+    "QueryTimeout",
+    "QueueOverflow",
+    "Request",
+    "Ticket",
+    "GraphEntry",
+    "GraphManager",
+    "DEFAULT_POLICIES",
+    "KIND_TO_CLASS",
+    "READ_LANE",
+    "HEAVY_LANE",
+    "UPDATE_LANE",
+    "GraphService",
+    "QUERY_KINDS",
+    "StreamSession",
+    "drive_stream",
+    "SnapshotStore",
+    "load_latest_state",
+    "session_template",
+    "DEFAULT_MIX",
+    "attest_fusion",
+    "run_load",
+]

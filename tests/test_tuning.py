@@ -120,3 +120,57 @@ def test_tuned_engine_matches_untuned(tmp_path, small_graphs):
     tc2 = TriangleCounter(method="pallas", tuner=warm_tuner)
     assert tc2.count(e) == expect
     assert warm_tuner.n_hits > 0 and warm_tuner.n_tuned == 0
+
+
+def test_concurrent_caches_merge_instead_of_clobber(tmp_path):
+    """Two engines sharing one cache file must not lose each other's
+    entries: save() is read-merge-write, last-writer-wins per *key*.
+
+    The seed wrote the in-memory view over the whole file, so whichever
+    instance saved last erased the other's picks — the regression this
+    pins down."""
+    path = tmp_path / "tiles.json"
+    a = TileCache(path)
+    b = TileCache(path)
+    ka, kb = shape_key(8, 16, 16), shape_key(64, 32, 32)
+    a.put(ka, TileConfig(4, 128, 1.0))
+    a.save()
+    b.put(kb, TileConfig(16, 256, 2.0))
+    b.save()  # seed behavior: would erase ka
+    merged = TileCache(path)
+    assert merged.get(ka) == TileConfig(4, 128, 1.0)
+    assert merged.get(kb) == TileConfig(16, 256, 2.0)
+    # per-key last-writer-wins: a re-save of ka with a new pick prevails
+    a.put(ka, TileConfig(8, 256, 0.5))
+    a.save()
+    assert TileCache(path).get(ka) == TileConfig(8, 256, 0.5)
+    assert TileCache(path).get(kb) == TileConfig(16, 256, 2.0)
+
+
+def test_contended_saves_union_survives(tmp_path):
+    """Many threads interleaving put+save on one file: the union of every
+    thread's keys survives (no lost updates under contention)."""
+    import threading
+
+    path = tmp_path / "tiles.json"
+    n_threads, keys_per = 6, 5
+    errs = []
+
+    def writer(tid):
+        try:
+            cache = TileCache(path)
+            for i in range(keys_per):
+                cache.put(f"t{tid}k{i}", TileConfig(8, 128, float(tid)))
+                cache.save()
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    final = TileCache(path)
+    expect = {f"t{t}k{i}" for t in range(n_threads) for i in range(keys_per)}
+    assert expect <= set(final.entries)
