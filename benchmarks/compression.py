@@ -1,0 +1,81 @@
+"""Compressed ``.tricsrz`` storage: ratio, warm load, and kernel locality.
+
+For each registry graph (offline fallbacks, shrunk under ``--quick``) and
+each node ordering (natural / degree / bfs):
+
+* on-disk bytes of the flat ``.tricsr`` vs the delta/varint ``.tricsrz``
+  and the resulting compression ratio,
+* warm (cache-hit) load time of each form,
+* kernel wall-clock of a count on the flat natural-order CSR vs the
+  relabeled compressed graph at the **same** method and wedge budget —
+  the locality-relabeling win (or cost) net of chunk-wise decode,
+
+with the count asserted bit-identical between the two paths and the
+per-node result asserted to map back through the inverse permutation.
+Paste results into EXPERIMENTS.md §Compression.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import TriangleCounter
+from repro.graphs.io import ORDERINGS, load_tricsr, load_tricsrz, resolve_to_csr
+
+# (dataset, fallback_scale full, fallback_scale quick) — karate is the real
+# fixture; the rest resolve to their deterministic offline stand-ins.
+GRAPHS = [
+    ("karate", None, None),
+    ("com-dblp", 14, 10),
+    ("roadnet-ca", 14, 10),
+]
+
+METHOD = "wedge_bsearch"
+WEDGE_BUDGET = 1 << 20
+
+
+def run():
+    rows = []
+    from .common import quick, timeit
+
+    with tempfile.TemporaryDirectory(prefix="bench-compression-") as tmp:
+        for name, scale_full, scale_quick in GRAPHS:
+            scale = scale_quick if quick() else scale_full
+            cache = os.path.join(tmp, "cache")
+            flat, info = resolve_to_csr(name, cache, allow_download=False,
+                                        fallback_scale=scale)
+            flat_path = info["ingest"]["cache_path"]
+            flat_bytes = os.path.getsize(flat_path)
+
+            tc = TriangleCounter(method=METHOD, max_wedge_chunk=WEDGE_BUDGET)
+            t_flat = tc.count(flat)
+            pn_flat = tc.per_node(flat)
+            us = timeit(lambda: tc.count(flat))
+            rows.append((f"compression/{name}/count-flat", us,
+                         f"T={t_flat} | {flat_bytes}B on disk"))
+            us = timeit(lambda: load_tricsr(flat_path, mmap=True))
+            rows.append((f"compression/{name}/load-flat", us, "warm mmap"))
+
+            for order in ORDERINGS:
+                z, zinfo = resolve_to_csr(name, cache, allow_download=False,
+                                          fallback_scale=scale,
+                                          storage="compressed", order=order)
+                z_path = zinfo["ingest"]["cache_path"]
+                z_bytes = os.path.getsize(z_path)
+                ratio = flat_bytes / max(z_bytes, 1)
+
+                # exactness gate: count and mapped per-node bit-identical
+                t_z = tc.count(z)
+                assert t_z == t_flat, (name, order, t_z, t_flat)
+                assert np.array_equal(z.map_per_node(tc.per_node(z)), pn_flat), \
+                    (name, order)
+
+                us = timeit(lambda: load_tricsrz(z_path, mmap=True))
+                rows.append((f"compression/{name}/load-z-{order}", us,
+                             f"ratio={ratio:.2f}x | z={z_bytes}B | count_ok"))
+                us = timeit(lambda: tc.count(z))
+                rows.append((f"compression/{name}/count-z-{order}", us,
+                             f"T={t_z} | vs flat at equal budget | count_ok"))
+    return rows

@@ -14,6 +14,7 @@ from repro.obs import env_fingerprint
 from . import (
     ablations,
     analytics,
+    compression,
     engine_chunking,
     fig1_scaling,
     ingest,
@@ -39,6 +40,7 @@ SUITES = {
     "serving": serving.run,            # multi-tenant service: batching, snapshots
     "streaming": streaming.run,        # incremental updates vs full recount
     "ingest": ingest.run,              # out-of-core parse/canonicalize/cache
+    "compression": compression.run,    # .tricsrz ratio / warm load / locality
     "analytics": analytics.run,        # support / k-truss / clustering
 }
 

@@ -352,5 +352,16 @@ def graph_report(
             "method": dec.method,
         }
 
+    # Compressed inputs count in relabeled (locality-ordered) ids; map every
+    # node id in the report back through the stored inverse permutation so
+    # callers always see the original graph's ids.
+    new_to_old = getattr(graph, "new_to_old", None)
+    if new_to_old is not None:
+        for d in report["clustering"]["top_nodes"]:
+            d["node"] = int(new_to_old[d["node"]])
+        for d in report["support"]["top_edges"]:
+            d["u"] = int(new_to_old[d["u"]])
+            d["v"] = int(new_to_old[d["v"]])
+
     report["timings_s"] = timings
     return report

@@ -111,6 +111,7 @@ def register_pass(name: str) -> Callable[[PassFn], PassFn]:
 def load_passes() -> "dict[str, PassFn]":
     """Import the pass modules so their ``register_pass`` decorators run."""
     from . import backend_protocol  # noqa: F401
+    from . import codec  # noqa: F401
     from . import collectives  # noqa: F401
     from . import obs_discipline  # noqa: F401
     from . import overflow  # noqa: F401

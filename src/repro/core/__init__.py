@@ -24,6 +24,7 @@ from .preprocess import (
     preprocess,
     preprocess_host_offload,
     oriented_from_undirected_csr,
+    oriented_from_compressed,
     degrees,
 )
 from .engine import (
@@ -116,6 +117,7 @@ __all__ = [
     "preprocess",
     "preprocess_host_offload",
     "oriented_from_undirected_csr",
+    "oriented_from_compressed",
     "degrees",
     "WedgePlan",
     "make_wedge_plan",

@@ -123,7 +123,12 @@ from .count import (
     panel_intersect_support,
     segmented_int32_sum,
 )
-from .preprocess import OrientedCSR, oriented_from_undirected_csr, preprocess
+from .preprocess import (
+    OrientedCSR,
+    oriented_from_compressed,
+    oriented_from_undirected_csr,
+    preprocess,
+)
 from repro.distributed.compression import ensure_fits_int32
 
 __all__ = [
@@ -397,17 +402,23 @@ def search_steps(csr: OrientedCSR) -> int:
 def prepare_oriented(edges, n_nodes: int | None = None) -> OrientedCSR | None:
     """Normalize any accepted graph input to an :class:`OrientedCSR`.
 
-    Accepts a pre-built :class:`OrientedCSR` (returned as-is), a cached
-    undirected CSR (anything with ``row_offsets``/``col``/``n_nodes``,
-    e.g. ``repro.graphs.io.CSRGraph`` — oriented by a host-side filter,
-    never re-canonicalized), or a canonical edge array (full
-    preprocessing).  Returns ``None`` for an empty graph.  This is the
-    shared input front door of :class:`TriangleCounter` and the analytics
-    subsystem — call it once and pass the CSR around to avoid repeated
-    preprocessing.
+    Accepts a pre-built :class:`OrientedCSR` (returned as-is), a
+    compressed CSR (anything with ``decode_block``, e.g.
+    ``repro.graphs.io.CompressedCSR`` — oriented block-by-block without
+    ever materializing the flat ``col``; note per-node/support results
+    are then in *relabeled* ids, map back with
+    ``CompressedCSR.map_per_node`` / ``new_to_old``), a cached undirected
+    CSR (anything with ``row_offsets``/``col``/``n_nodes``, e.g.
+    ``repro.graphs.io.CSRGraph`` — oriented by a host-side filter, never
+    re-canonicalized), or a canonical edge array (full preprocessing).
+    Returns ``None`` for an empty graph.  This is the shared input front
+    door of :class:`TriangleCounter` and the analytics subsystem — call
+    it once and pass the CSR around to avoid repeated preprocessing.
     """
     if isinstance(edges, OrientedCSR):
         csr = edges
+    elif hasattr(edges, "decode_block"):
+        csr = oriented_from_compressed(edges)
     elif hasattr(edges, "row_offsets") and hasattr(edges, "col"):
         csr = oriented_from_undirected_csr(
             edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)
@@ -428,6 +439,11 @@ def degree_histogram(edges, n_nodes: int | None = None) -> tuple[np.ndarray, int
     """Undirected degrees + node count for any accepted graph input kind."""
     if isinstance(edges, OrientedCSR):
         return np.asarray(edges.degree, dtype=np.int64), edges.n_nodes
+    if hasattr(edges, "decode_block"):
+        # compressed CSR: degrees come off the flat row offsets, no decode
+        return np.diff(np.asarray(edges.row_offsets)).astype(np.int64), int(
+            edges.n_nodes
+        )
     if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
         return np.diff(np.asarray(edges.row_offsets)).astype(np.int64), int(
             getattr(edges, "n_nodes", np.asarray(edges.row_offsets).shape[0] - 1)

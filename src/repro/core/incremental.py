@@ -173,6 +173,13 @@ class IncrementalTriangleCounter:
         self._per_node = np.zeros(self._n, np.int64)
         self._deg = np.zeros(self._n, np.int64)
         self.last_update_stats: UpdateStats | None = None
+        if hasattr(edges, "decode_block"):
+            # compressed CSR bootstrap: decode once, mapped back to
+            # *original* ids, so the caller's insert/delete stream keeps
+            # speaking its own node names regardless of the on-disk order
+            edges = edges.edge_array(original_ids=True)
+        elif hasattr(edges, "edge_array"):
+            edges = edges.edge_array()  # cached flat CSRGraph
         if edges is not None and np.asarray(edges).size:
             und = self._normalize_batch(edges)
             if und.shape[0]:

@@ -40,6 +40,7 @@ __all__ = [
     "preprocess",
     "preprocess_host_offload",
     "oriented_from_undirected_csr",
+    "oriented_from_compressed",
     "degrees",
 ]
 
@@ -134,6 +135,45 @@ def oriented_from_undirected_csr(row_offsets, col, n_nodes: int | None = None) -
     return OrientedCSR(out_row, src, out_col, out_degree, deg)
 
 
+def oriented_from_compressed(z) -> OrientedCSR:
+    """Forward-orient a compressed CSR block-by-block, never decoding it all.
+
+    ``z`` is duck-typed (anything with ``row_offsets`` / ``n_nodes`` /
+    ``n_blocks`` / ``block_node_range`` / ``decode_block``, i.e. a
+    :class:`repro.graphs.io.CompressedCSR`).  Degrees come from the flat
+    row offsets alone; each neighbor block is then decoded, filtered by
+    the engine's forward rule ``(du < dv) | ((du == dv) & (u < v))``, and
+    the kept slices concatenated.  Blocks cover contiguous node ranges in
+    order and the filter preserves order, so the concatenation is
+    bit-identical to ``oriented_from_undirected_csr`` of the full decode
+    — while peak extra host memory is one decoded block, not the whole
+    4-byte-per-neighbor ``col``.
+    """
+    row = np.asarray(z.row_offsets, dtype=np.int64)
+    n_nodes = int(z.n_nodes)
+    ensure_fits_int32(int(row[-1]), "compressed CSR edge slots (oriented offsets)")
+    deg = np.diff(row).astype(np.int32)
+    src_parts, col_parts = [], []
+    for k in range(z.n_blocks):
+        lo, hi = z.block_node_range(k)
+        v = np.asarray(z.decode_block(k), dtype=np.int32)
+        u = np.repeat(np.arange(lo, hi, dtype=np.int32),
+                      np.diff(row[lo : hi + 1]))
+        du, dv = deg[u], deg[v]
+        keep = (du < dv) | ((du == dv) & (u < v))
+        src_parts.append(u[keep])
+        col_parts.append(v[keep])
+    src = (np.ascontiguousarray(np.concatenate(src_parts))
+           if src_parts else np.zeros(0, np.int32))
+    out_col = (np.ascontiguousarray(np.concatenate(col_parts))
+               if col_parts else np.zeros(0, np.int32))
+    out_row = np.searchsorted(src, np.arange(n_nodes + 1, dtype=np.int32)).astype(
+        np.int32
+    )
+    out_degree = out_row[1:] - out_row[:-1]
+    return OrientedCSR(out_row, src, out_col, out_degree, deg)
+
+
 def preprocess_host_offload(edges: np.ndarray, n_nodes: int | None = None) -> OrientedCSR:
     """Host-side degree + orientation, device-side sort (paper §III-D6).
 
@@ -149,6 +189,8 @@ def preprocess_host_offload(edges: np.ndarray, n_nodes: int | None = None) -> Or
     """
     if isinstance(edges, OrientedCSR):
         return edges  # already oriented — re-filtering would drop edges
+    if hasattr(edges, "decode_block"):
+        return oriented_from_compressed(edges)
     if hasattr(edges, "row_offsets") and hasattr(edges, "col"):
         return oriented_from_undirected_csr(
             edges.row_offsets, edges.col, getattr(edges, "n_nodes", None)

@@ -18,6 +18,11 @@ file to the engine:
     memory-map on every later load — plus per-stripe slab views
     (``.tricsr.stripe{k}of{N}``) so each device of a §III-E mesh memmaps
     only its node-range slab.
+``codec``
+    The compressed ``.tricsrz`` variant: delta + varint neighbor blocks
+    behind a block index (decode individual node ranges on demand), with
+    degree-descending / BFS locality relabeling recorded in the header so
+    per-node results map back through the inverse permutation.
 ``registry``
     Named datasets (the paper's Table I graphs) with URLs, checksums and
     deterministic Kronecker/R-MAT fallbacks of matching scale for offline
@@ -48,7 +53,19 @@ from .cache import (
     TRISLB_MAGIC,
     CacheError,
 )
-from .ingest import ingest, cache_path_for, IngestStats
+from .codec import (
+    CompressedCSR,
+    ORDERINGS,
+    TRICSRZ_MAGIC,
+    TRICSRZ_VERSION,
+    csr_stripes_from_compressed,
+    load_tricsrz,
+    load_tricsrz_stripe,
+    order_permutation,
+    relabel_csr,
+    save_tricsrz,
+)
+from .ingest import ingest, cache_path_for, IngestStats, STORAGES
 from .registry import (
     Dataset,
     DATASETS,
@@ -78,9 +95,20 @@ __all__ = [
     "TRICSR_VERSION",
     "TRISLB_MAGIC",
     "CacheError",
+    "CompressedCSR",
+    "ORDERINGS",
+    "TRICSRZ_MAGIC",
+    "TRICSRZ_VERSION",
+    "csr_stripes_from_compressed",
+    "load_tricsrz",
+    "load_tricsrz_stripe",
+    "order_permutation",
+    "relabel_csr",
+    "save_tricsrz",
     "ingest",
     "cache_path_for",
     "IngestStats",
+    "STORAGES",
     "Dataset",
     "DATASETS",
     "get_dataset",

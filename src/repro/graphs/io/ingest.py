@@ -22,10 +22,32 @@ from repro import obs
 
 from ..formats import csr_from_forward_pairs, edge_array_to_csr
 from .cache import CSRGraph, CacheError, TRICSR_VERSION, load_tricsr, save_tricsr
+from .codec import ORDERINGS, load_tricsrz, save_tricsrz
 from .external import ExternalSortStats, canonicalize_edges_external
 from .parsers import DEFAULT_CHUNK_EDGES, iter_edge_chunks
 
-__all__ = ["ingest", "cache_path_for", "IngestStats", "csr_from_edge_array"]
+__all__ = [
+    "ingest",
+    "cache_path_for",
+    "IngestStats",
+    "csr_from_edge_array",
+    "STORAGES",
+]
+
+STORAGES = ("flat", "compressed")
+
+
+def _check_storage_order(storage: str, order: str) -> None:
+    if storage not in STORAGES:
+        raise ValueError(f"unknown storage {storage!r}; known: {STORAGES}")
+    if order not in ORDERINGS:
+        raise ValueError(f"unknown ordering {order!r}; known: {ORDERINGS}")
+    if storage == "flat" and order != "natural":
+        raise ValueError(
+            "order != 'natural' requires storage='compressed' — the flat "
+            ".tricsr has nowhere to record the inverse permutation, so "
+            "per-node results could not be mapped back to original ids"
+        )
 
 
 @dataclasses.dataclass
@@ -41,6 +63,9 @@ class IngestStats:
     cache_path: str | None
     cache_hit: bool
     source_kind: str = "file"   # "file" | "download" | "fallback" (set by registry)
+    storage: str = "flat"       # "flat" (.tricsr) | "compressed" (.tricsrz)
+    order: str = "natural"      # node ordering baked into the cache
+    cache_bytes: int = 0        # on-disk size of the cache file (0 if uncached)
     raw_edges: int = 0
     unique_edges: int = 0
     spill_runs: int = 0
@@ -53,24 +78,39 @@ class IngestStats:
         return dataclasses.asdict(self)
 
 
-def cache_path_for(path: str | os.PathLike, cache_dir: str | os.PathLike) -> str:
+def cache_path_for(
+    path: str | os.PathLike,
+    cache_dir: str | os.PathLike,
+    *,
+    storage: str = "flat",
+    order: str = "natural",
+) -> str:
     """Cache file path for ``path``: name + source-identity digest.
 
     The digest covers absolute path, size, and mtime_ns (ccache-style
     sloppy identity — content hashing a multi-GB edge list would cost the
-    parse we are trying to skip) plus the ``.tricsr`` format version, so
-    touching or replacing the source, or upgrading the format, misses
-    cleanly instead of serving a stale CSR.
+    parse we are trying to skip) plus the ``.tricsr`` format version
+    **and the storage format / node ordering**: a degree-relabeled
+    ``.tricsrz`` and a flat natural-order ``.tricsr`` of the same source
+    are different artifacts and must never collide on one cache path, or
+    a stale load would hand back the wrong ids.  Touching or replacing
+    the source, or upgrading the format, misses cleanly instead of
+    serving a stale CSR.
     """
+    _check_storage_order(storage, order)
     src = os.path.abspath(os.fspath(path))
     st = os.stat(src)
-    ident = f"{src}\x00{st.st_size}\x00{st.st_mtime_ns}\x00v{TRICSR_VERSION}"
+    ident = (
+        f"{src}\x00{st.st_size}\x00{st.st_mtime_ns}\x00v{TRICSR_VERSION}"
+        f"\x00{storage}\x00{order}"
+    )
     digest = hashlib.sha256(ident.encode()).hexdigest()[:16]
     stem = os.path.basename(src)
     for ext in (".gz", ".txt", ".mtx", ".el", ".edges", ".edgelist", ".tsv", ".csv", ".snap"):
         if stem.endswith(ext):
             stem = stem[: -len(ext)]
-    return os.path.join(os.fspath(cache_dir), f"{stem}-{digest}.tricsr")
+    suffix = ".tricsrz" if storage == "compressed" else ".tricsr"
+    return os.path.join(os.fspath(cache_dir), f"{stem}-{digest}{suffix}")
 
 
 def csr_from_edge_array(edges: np.ndarray) -> CSRGraph:
@@ -106,38 +146,60 @@ def ingest(
     fmt: str | None = None,
     spill_dir: str | os.PathLike | None = None,
     mmap: bool = True,
-) -> tuple[CSRGraph, IngestStats]:
+    storage: str = "flat",
+    order: str = "natural",
+):
     """Load ``path`` as a canonical CSR, through the cache when possible.
 
-    With ``cache_dir`` set, a valid ``.tricsr`` for the current source
-    identity short-circuits everything (``stats.cache_hit``); otherwise
-    the file is parsed in ``max_chunk_edges`` blocks, canonicalized
-    out-of-core (spilling sorted runs next to the cache, or ``spill_dir``),
-    converted to CSR, and written back to the cache atomically.
+    With ``cache_dir`` set, a valid cache for the current source identity
+    short-circuits everything (``stats.cache_hit``); otherwise the file
+    is parsed in ``max_chunk_edges`` blocks, canonicalized out-of-core
+    (spilling sorted runs next to the cache, or ``spill_dir``), converted
+    to CSR, and written back to the cache atomically.
+
+    ``storage="flat"`` (default) returns a memory-mapped
+    :class:`CSRGraph` off a ``.tricsr``; ``storage="compressed"`` writes
+    a delta/varint ``.tricsrz`` relabeled by ``order``
+    (natural/degree/bfs) and returns a
+    :class:`~repro.graphs.io.CompressedCSR` whose neighbor blocks decode
+    on demand — the engine accepts either directly.
     """
+    _check_storage_order(storage, order)
     src = os.path.expanduser(os.fspath(path))
     if not os.path.isfile(src):
         raise FileNotFoundError(
             f"edge list not found: {src!r} (pass a SNAP-style text or "
             "MatrixMarket file, optionally .gz-compressed)"
         )
+    compressed = storage == "compressed"
+    if compressed and cache_dir is None:
+        raise ValueError(
+            "storage='compressed' requires a cache_dir: the .tricsrz file "
+            "is the artifact the block-decoding CompressedCSR reads from"
+        )
+    load_cache = (
+        (lambda p, verify=False: load_tricsrz(p, mmap=mmap, verify=verify))
+        if compressed
+        else (lambda p, verify=False: load_tricsr(p, mmap=mmap, verify=verify))
+    )
     cache_path = None
     if cache_dir is not None:
         cache_dir = os.path.expanduser(os.fspath(cache_dir))
         os.makedirs(cache_dir, exist_ok=True)
-        cache_path = cache_path_for(src, cache_dir)
+        cache_path = cache_path_for(src, cache_dir, storage=storage, order=order)
         if os.path.exists(cache_path):
             t0 = time.perf_counter()
             try:
                 with obs.span("ingest.cache_load", cat="io",
                               args={"path": os.path.basename(cache_path)}):
-                    csr = load_tricsr(cache_path, mmap=mmap)
+                    csr = load_cache(cache_path)
             except CacheError:
                 pass  # stale/corrupt cache: fall through and rebuild
             else:
                 obs.counter("io.tricsr_cache_hits").add()
                 stats = IngestStats(source=src, cache_path=cache_path,
-                                    cache_hit=True,
+                                    cache_hit=True, storage=storage, order=order,
+                                    cache_bytes=os.path.getsize(cache_path),
                                     load_s=time.perf_counter() - t0)
                 stats.unique_edges = csr.n_edges
                 return csr, stats
@@ -183,18 +245,27 @@ def ingest(
     csr_build_s = time.perf_counter() - t0
 
     cache_write_s = 0.0
+    cache_bytes = 0
     if cache_path is not None:
         t0 = time.perf_counter()
-        with obs.span("ingest.cache_write", cat="io"):
-            save_tricsr(cache_path, csr)
+        with obs.span("ingest.cache_write", cat="io",
+                      args={"storage": storage, "order": order}):
+            if compressed:
+                save_tricsrz(cache_path, csr, order=order)
+            else:
+                save_tricsr(cache_path, csr)
         cache_write_s = time.perf_counter() - t0
+        cache_bytes = os.path.getsize(cache_path)
         # reload through the cache so callers hold the mmap, not the heap copy
-        csr = load_tricsr(cache_path, mmap=mmap, verify=True)
+        csr = load_cache(cache_path, verify=True)
 
     return csr, IngestStats(
         source=src,
         cache_path=cache_path,
         cache_hit=False,
+        storage=storage,
+        order=order,
+        cache_bytes=cache_bytes,
         raw_edges=ext_stats.raw_edges,
         unique_edges=ext_stats.unique_edges,
         spill_runs=ext_stats.spill_runs,

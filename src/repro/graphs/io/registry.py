@@ -258,6 +258,8 @@ def resolve_to_csr(
     fallback_scale: int | None = None,
     allow_download: bool | None = None,
     mmap: bool = True,
+    storage: str = "flat",
+    order: str = "natural",
 ) -> tuple[CSRGraph, dict]:
     """Resolve a *source spec* — dataset name or file path — to a CSR.
 
@@ -274,7 +276,7 @@ def resolve_to_csr(
         csr, stats, ds = materialize_dataset(
             source, cache_dir, allow_download=allow_download,
             max_chunk_edges=max_chunk_edges, fallback_scale=fallback_scale,
-            mmap=mmap,
+            mmap=mmap, storage=storage, order=order,
         )
         real = stats.source_kind == "download" or ds.name == "karate"
         info = dict(
@@ -283,7 +285,8 @@ def resolve_to_csr(
         )
         return csr, info
     csr, stats = ingest(
-        source, cache_dir=cache_dir, max_chunk_edges=max_chunk_edges, mmap=mmap
+        source, cache_dir=cache_dir, max_chunk_edges=max_chunk_edges, mmap=mmap,
+        storage=storage, order=order,
     )
     return csr, dict(
         source="input", path=os.fspath(source), ingest=stats.as_dict(),
@@ -299,6 +302,8 @@ def materialize_dataset(
     max_chunk_edges: int = DEFAULT_CHUNK_EDGES,
     fallback_scale: int | None = None,
     mmap: bool = True,
+    storage: str = "flat",
+    order: str = "natural",
 ) -> tuple[CSRGraph, IngestStats, Dataset]:
     """Resolve ``name`` to a ready-to-count CSR through the cache.
 
@@ -352,7 +357,7 @@ def materialize_dataset(
 
     csr, stats = ingest(
         src, cache_dir=cache_dir, max_chunk_edges=max_chunk_edges,
-        fmt=ds.fmt, mmap=mmap,
+        fmt=ds.fmt, mmap=mmap, storage=storage, order=order,
     )
     stats.source_kind = kind
     if kind == "fallback" and ds.fallback is not None and ds.fallback[0] == "karate":

@@ -77,6 +77,14 @@ def add_source_arguments(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--max-chunk-edges", type=int, default=None,
                     help="host-memory bound for parsing/canonicalization, "
                          "in raw edges per chunk (default: 4M)")
+    ap.add_argument("--storage", default="flat", choices=("flat", "compressed"),
+                    help="cache format: flat .tricsr mmap, or compressed "
+                         ".tricsrz delta/varint neighbor blocks decoded "
+                         "chunk-wise into the engine (default: %(default)s)")
+    ap.add_argument("--order", default=None, choices=("natural", "degree", "bfs"),
+                    help="node relabeling baked into a compressed cache for "
+                         "reference locality (default: degree when "
+                         "--storage compressed; requires --storage compressed)")
     ap.add_argument("--download", action="store_true",
                     help="allow fetching --dataset sources from the network "
                          "(also enabled by REPRO_ALLOW_DOWNLOAD=1)")
@@ -104,7 +112,21 @@ def resolve_graph(args, log=print):
     """
     if args.input is not None and args.dataset is not None:
         raise SystemExit("--input and --dataset are mutually exclusive")
+    storage = getattr(args, "storage", "flat")
+    order = getattr(args, "order", None)
+    if order is not None and storage != "compressed":
+        raise SystemExit("--order requires --storage compressed (the flat "
+                         ".tricsr cannot record the inverse permutation)")
+    if order is None:
+        order = "degree" if storage == "compressed" else "natural"
+    if storage != "flat" and args.input is None and args.dataset is None:
+        raise SystemExit("--storage/--order shape the on-disk cache and "
+                         "need an --input or --dataset source (generators "
+                         "never touch the cache)")
     kwargs = {}
+    if storage != "flat":
+        kwargs["storage"] = storage
+        kwargs["order"] = order
     if args.max_chunk_edges is not None:
         if args.max_chunk_edges < 1:
             raise SystemExit("--max-chunk-edges must be positive")

@@ -1,4 +1,4 @@
-"""Multi-graph residency: LRU-evicted ``.tricsr`` mmaps under a byte budget.
+"""Multi-graph residency: LRU-evicted ``.tricsr``/``.tricsrz`` graphs under a byte budget.
 
 A service instance hosts many tenants' graphs but the machine hosts one
 address space.  The manager keeps each attached graph's memory-mapped
@@ -57,7 +57,20 @@ class GraphEntry:
         return self.csr is not None
 
 
-def _csr_nbytes(csr) -> int:
+def _resident_nbytes(csr) -> int:
+    """Bytes this graph actually holds resident, not its logical CSR size.
+
+    A :class:`~repro.graphs.io.CompressedCSR` reports materialized
+    metadata plus the compressed payload (``resident_nbytes()``) —
+    charging its *decompressed* size would evict neighbors to make room
+    for memory that is never allocated (and ``.col`` does not even exist
+    on the compressed form).  Flat CSRs are charged by their array
+    buffers, which for the mmap path is the mapped region the page cache
+    can fault in.
+    """
+    fn = getattr(csr, "resident_nbytes", None)
+    if callable(fn):
+        return int(fn())
     return int(np.asarray(csr.row_offsets).nbytes + np.asarray(csr.col).nbytes)
 
 
@@ -122,13 +135,20 @@ class GraphManager:
         *,
         fallback_scale: int | None = None,
         max_chunk_edges: int | None = None,
+        storage: str | None = None,
+        order: str | None = None,
     ) -> GraphEntry:
         """Register a graph under ``name``; loading is deferred to first lease.
 
         ``source`` is anything :func:`resolve_to_csr` accepts — a dataset
-        registry name or an edge-list path.  Re-attaching an existing
-        name with the same source is a no-op; with a different source it
-        is an error (evict/detach first).
+        registry name or an edge-list path.  ``storage="compressed"``
+        (optionally with ``order`` natural/degree/bfs) loads the graph
+        as a block-decoding ``.tricsrz`` :class:`CompressedCSR`, whose
+        residency cost is its compressed payload — the budget charges
+        what is actually held, so tenants on compressed graphs pack
+        several-fold denser than their flat footprint would allow.
+        Re-attaching an existing name with the same source is a no-op;
+        with a different source it is an error (evict/detach first).
         """
         with self._lock:
             ent = self._entries.get(name)
@@ -143,6 +163,10 @@ class GraphManager:
                 opts["fallback_scale"] = fallback_scale
             if max_chunk_edges is not None:
                 opts["max_chunk_edges"] = max_chunk_edges
+            if storage is not None:
+                opts["storage"] = storage
+            if order is not None:
+                opts["order"] = order
             ent = GraphEntry(name, source, opts)
             self._entries[name] = ent
             return ent
@@ -200,7 +224,7 @@ class GraphManager:
                 allow_download=self.allow_download,
                 **ent.options,
             )
-        nbytes = _csr_nbytes(csr)
+        nbytes = _resident_nbytes(csr)
         self._make_room(nbytes)
         ent.csr, ent.meta, ent.nbytes = csr, meta, nbytes
         ent.n_loads += 1

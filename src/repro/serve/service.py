@@ -343,6 +343,10 @@ class GraphService:
             count: int | None = None
             if kinds & {"per_node", "clustering"}:
                 per_node = engine.per_node(csr)
+                if hasattr(csr, "map_per_node"):
+                    # compressed graphs count in relabeled ids; answer in
+                    # the tenant's original ids
+                    per_node = csr.map_per_node(per_node)
                 obs.counter("serve.engine_passes").add()
             if "support" in kinds:
                 support = engine.edge_support(csr)
@@ -358,6 +362,8 @@ class GraphService:
             deg = None
             if kinds & {"clustering", "transitivity"}:
                 deg, _ = degree_histogram(csr)
+                if hasattr(csr, "map_per_node"):
+                    deg = csr.map_per_node(deg)
             truss = None
             if "truss" in kinds:
                 from repro.analytics import k_truss_decomposition

@@ -1,0 +1,31 @@
+"""trilint fixture: deliberate decode-narrowing violation (Z1).
+
+Never imported — parsed from disk by tests/test_check.py to prove the
+`codec` pass fires.  A compliant twin below shows the guarded form the
+pass must NOT flag.
+"""
+
+import numpy as np
+
+from repro.distributed.compression import ensure_fits_int32
+from repro.graphs.io.codec import decode_varints
+
+
+def unguarded_block_cols(payload, count):
+    # Z1: decoded varint data narrowed to the kernel dtype with no bound
+    # check — a payload value >= 2^31 wraps to a negative column id.
+    vals = decode_varints(payload, count)
+    return vals.astype(np.int32)
+
+
+def unguarded_scalar_cast(payload):
+    # Z1 (scalar form): np.int32() cast of a decoded value.
+    first = decode_varints(payload, 1)[0]
+    return np.int32(first)
+
+
+def guarded_block_cols(payload, count):
+    # Compliant: bound-checked before narrowing — must not be flagged.
+    vals = decode_varints(payload, count)
+    ensure_fits_int32(int(vals.max(initial=0)), "decoded column id")
+    return vals.astype(np.int32)

@@ -55,6 +55,7 @@ def codes(findings):
             },
         ),
         ("stats_lifecycle", "core/bad_stats_lifecycle.py", {"S1-stale-stats"}),
+        ("codec", "core/bad_codec.py", {"Z1-unchecked-decode-narrow"}),
         ("obs_discipline", "core/bad_obs_discipline.py", {"D1-unsynced-span"}),
     ],
 )
@@ -83,6 +84,18 @@ def test_stats_lifecycle_compliant_method_not_flagged():
     flagged = {f.message.split("`")[1] for f in findings}
     assert "LeakyEngine.query" in flagged
     assert "LeakyEngine.count" not in flagged
+
+
+def test_codec_guarded_narrowing_not_flagged():
+    findings = run_checks(FIXTURES, select=["codec"])
+    in_fixture = [
+        f for f in findings
+        if f.path == "core/bad_codec.py" and not f.suppressed
+    ]
+    # exactly the two unguarded narrows; the ensure_fits_int32 twin passes
+    assert len(in_fixture) == 2, [f.render() for f in in_fixture]
+    flagged = {f.message.split("`")[1] for f in in_fixture}
+    assert flagged == {"unguarded_block_cols", "unguarded_scalar_cast"}
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +165,7 @@ def test_cli_json_clean_on_repo():
     assert report["counts"]["unsuppressed"] == 0
     assert set(report["passes"]) == {
         "overflow", "recompile", "collectives", "backend_protocol",
-        "stats_lifecycle", "obs_discipline",
+        "stats_lifecycle", "obs_discipline", "codec",
     }
 
 

@@ -401,6 +401,46 @@ def test_ingest_cache_miss_then_hit(tmp_path):
     assert not s3.cache_hit
 
 
+def test_cache_key_includes_storage_and_order(tmp_path):
+    # regression: a flat .tricsr and a relabeled .tricsrz of the same
+    # source must never collide on one cache path — a stale hit would
+    # hand back the wrong storage form (or worse, the wrong node ids)
+    from repro.graphs.io import cache_path_for
+
+    e = kronecker_rmat(7, seed=4)
+    src = tmp_path / "g.txt"
+    _write_one_direction(src, e)
+    cdir = tmp_path / "cache"
+    os.makedirs(cdir)
+    keys = {
+        cache_path_for(src, cdir),
+        cache_path_for(src, cdir, storage="compressed", order="natural"),
+        cache_path_for(src, cdir, storage="compressed", order="degree"),
+        cache_path_for(src, cdir, storage="compressed", order="bfs"),
+    }
+    assert len(keys) == 4  # all four artifacts get distinct paths
+
+    # ingesting flat first must not satisfy a later compressed request
+    flat, s1 = ingest(src, cache_dir=cdir)
+    assert not s1.cache_hit
+    z, s2 = ingest(src, cache_dir=cdir, storage="compressed", order="degree")
+    assert not s2.cache_hit  # different artifact: clean miss, not a stale hit
+    assert s2.cache_path != s1.cache_path
+    assert s2.cache_path.endswith(".tricsrz")
+    z2, s3 = ingest(src, cache_dir=cdir, storage="compressed", order="degree")
+    assert s3.cache_hit and s3.cache_bytes == os.path.getsize(s3.cache_path)
+    # the two forms answer identically (per-node through the perm)
+    tc = TriangleCounter(method="wedge_bsearch")
+    assert tc.count(z2) == tc.count(flat)
+    np.testing.assert_array_equal(z2.map_per_node(tc.per_node(z2)),
+                                  tc.per_node(flat))
+    # flat storage cannot record a permutation: non-natural order rejects
+    with pytest.raises(ValueError):
+        ingest(src, cache_dir=cdir, storage="flat", order="degree")
+    with pytest.raises(ValueError):
+        ingest(src, storage="compressed")  # compressed requires a cache_dir
+
+
 def test_engine_accepts_cached_csr_and_oriented_csr(tmp_path, small_graphs):
     for name, e in small_graphs.items():
         csr = csr_from_edge_array(e)

@@ -234,6 +234,49 @@ def test_pinned_graphs_never_evicted(tmp_path):
     assert mgr.evict("a")  # unpinned now
 
 
+def test_budget_charges_resident_not_decompressed_bytes(tmp_path):
+    # The budget must charge what a graph actually holds resident: a
+    # compressed attachment admits under a budget its decompressed CSR
+    # would blow, and answers identically (per-node in original ids).
+    rng = np.random.default_rng(7)
+    e = rng.integers(0, 400, size=(6000, 2))
+    e = e[e[:, 0] != e[:, 1]]
+    src = tmp_path / "g.txt"
+    np.savetxt(src, e, fmt="%d")
+
+    sizer = GraphManager(str(tmp_path / "cache"))
+    sizer.attach("flat", str(src))
+    sizer.attach("z", str(src), storage="compressed", order="degree")
+    with sizer.lease("flat") as ent:
+        flat_bytes = ent.nbytes
+        flat_count = TriangleCounter(method="wedge_bsearch").count(ent.csr)
+        flat_pn = TriangleCounter(method="wedge_bsearch").per_node(ent.csr)
+    with sizer.lease("z") as ent:
+        z_bytes = ent.nbytes
+    assert z_bytes < flat_bytes / 2  # compressed residency is the small one
+
+    # a budget only the compressed form fits
+    budget = z_bytes + (flat_bytes - z_bytes) // 4
+    mgr = GraphManager(str(tmp_path / "cache"), memory_budget_bytes=budget)
+    mgr.attach("z", str(src), storage="compressed", order="degree")
+    with _service(mgr) as svc:
+        assert svc.query("z", "count", timeout=120.0) == flat_count
+        pn = svc.query("z", "per_node", timeout=120.0)
+    assert np.array_equal(pn, flat_pn)  # mapped back through the perm
+    assert mgr.resident_bytes() <= budget
+
+    # the decompressed size would NOT have fit: a flat attachment under
+    # the same budget loads but overshoots (recorded, not failed)
+    mgr.attach("flat", str(src))
+    with mgr.lease("flat"):
+        from repro import obs
+
+        over = obs.metrics_snapshot()["counters"].get(
+            "serve.budget_overcommit", 0)
+    assert over >= 0  # flat load either evicted z or overcommitted
+    assert "flat" in mgr.resident_names()
+
+
 def test_unattached_graph_rejects(manager):
     with _service(manager) as svc:
         with pytest.raises(KeyError):
